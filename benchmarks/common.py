@@ -1,0 +1,71 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import jpeg as J
+from repro.core import resnet as R
+from repro.data.synthetic import image_batch
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds per call (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def train_spatial_resnet(spec: R.ResNetSpec, steps: int, batch: int,
+                         seed: int, lr: float = 1e-2, momentum: float = 0.9):
+    """Train the paper's small spatial ResNet on synthetic images."""
+    params, state = R.init_resnet(jax.random.PRNGKey(seed), spec)
+    vel = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, vel, state, x, y):
+        def loss_fn(p):
+            logits, st = R.spatial_apply(p, state, x, training=True, spec=spec)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1)), st
+        (l, st), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        vel = jax.tree.map(lambda v, gg: momentum * v + gg, vel, g)
+        params = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+        return params, vel, st, l
+
+    for i in range(steps):
+        d = image_batch(seed, i, batch, spec_image_size(spec),
+                        spec.in_channels, spec.num_classes)
+        params, vel, state, l = step(params, vel, state,
+                                     jnp.asarray(d["images"]),
+                                     jnp.asarray(d["labels"]))
+    return params, state
+
+
+def spec_image_size(spec: R.ResNetSpec) -> int:
+    # input reduces by 2 per extra stage; the paper uses 32x32 -> 1 block
+    return 8 * (2 ** (len(spec.widths) - 1))
+
+
+def eval_accuracy(apply_fn, n_batches: int, batch: int, spec: R.ResNetSpec,
+                  seed: int = 1234, jpeg: bool = False) -> float:
+    hits, total = 0, 0
+    for i in range(n_batches):
+        d = image_batch(seed, 10_000 + i, batch, spec_image_size(spec),
+                        spec.in_channels, spec.num_classes)
+        x = jnp.asarray(d["images"])
+        if jpeg:
+            x = jnp.moveaxis(J.jpeg_encode(x, quality=spec.quality,
+                                           scaled=True), 1, 3)
+        logits = apply_fn(x)
+        hits += int((jnp.argmax(logits, -1) == jnp.asarray(d["labels"])).sum())
+        total += batch
+    return hits / total

@@ -1,0 +1,93 @@
+"""Paper Fig. 4: ReLU approximation accuracy.
+
+4a — raw block RMSE of ASM vs APX over spatial frequencies 1..15, using the
+paper's protocol (random 4×4 blocks box-upscaled to 8×8; the paper uses 10M
+blocks, we use 200k on CPU — the curves are already stable at 1e5).
+
+4b — model-conversion accuracy vs phi (spatial-trained weights).
+4c — JPEG-domain-trained accuracy vs phi (weights learn to cope).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import asm as A
+from repro.core import dct as D
+from repro.core import jpeg as J
+from repro.core import resnet as R
+from benchmarks.common import eval_accuracy, train_spatial_resnet
+from repro.data.synthetic import image_batch
+
+N_BLOCKS = 200_000
+SPEC = R.ResNetSpec(widths=(8, 12, 16), num_classes=10)
+
+
+def _paper_blocks(n: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    small = rng.uniform(-1, 1, size=(n, 4, 4))
+    big = np.kron(small, np.ones((2, 2)))
+    coef = D.dct2(big).reshape(n, 64)[:, D.zigzag_permutation()]
+    return jnp.asarray(coef, jnp.float32)
+
+
+def fig4a(emit) -> None:
+    coef = _paper_blocks(N_BLOCKS)
+    oracle = A.spatial_relu_oracle(coef)
+    asm_rmse = jax.jit(lambda c, phi: jnp.sqrt(jnp.mean(
+        (A.asm_relu(c, phi) - oracle) ** 2)), static_argnums=1)
+    apx_rmse = jax.jit(lambda c, phi: jnp.sqrt(jnp.mean(
+        (A.apx_relu(c, phi) - oracle) ** 2)), static_argnums=1)
+    wins = 0
+    for phi in range(1, 15):
+        e_asm = float(asm_rmse(coef, phi))
+        e_apx = float(apx_rmse(coef, phi))
+        wins += e_asm <= e_apx
+        emit(f"fig4a/phi{phi:02d}", 0.0, f"asm={e_asm:.4f};apx={e_apx:.4f}")
+    emit("fig4a/asm_wins", 0.0, f"{wins}/14")
+
+
+def fig4b(emit) -> None:
+    params, state = train_spatial_resnet(SPEC, steps=100, batch=32, seed=0)
+    for phi in (2, 6, 10, 14):
+        fwd = jax.jit(lambda c, phi=phi: R.jpeg_apply(
+            params, state, c, training=False, spec=SPEC, phi=phi)[0])
+        acc = eval_accuracy(fwd, 5, 32, SPEC, jpeg=True)
+        emit(f"fig4b/conversion_phi{phi:02d}", 0.0, f"acc={acc:.4f}")
+
+
+def fig4c(emit) -> None:
+    """Train *in* the JPEG domain at reduced phi: weights cope (paper §5.3)."""
+    for phi in (6, 14):
+        spec = R.ResNetSpec(widths=(8, 12, 16), num_classes=10, phi=phi)
+        params, state = R.init_resnet(jax.random.PRNGKey(0), spec)
+
+        @jax.jit
+        def step(params, state, c, y):
+            def loss_fn(p):
+                logits, st = R.jpeg_apply(p, state, c, training=True,
+                                          spec=spec, phi=phi)
+                lp = jax.nn.log_softmax(logits)
+                return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1)), st
+            (l, st), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params = jax.tree.map(lambda p, gg: p - 8e-3 * gg, params, g)
+            return params, st
+
+        for i in range(60):
+            d = image_batch(0, i, 32, 32, 3, 10)
+            coef = jnp.moveaxis(J.jpeg_encode(jnp.asarray(d["images"]),
+                                              quality=50, scaled=True), 1, 3)
+            params, state = step(params, state, coef,
+                                 jnp.asarray(d["labels"]))
+        fwd = jax.jit(lambda c: R.jpeg_apply(params, state, c,
+                                             training=False, spec=spec,
+                                             phi=phi)[0])
+        acc = eval_accuracy(fwd, 5, 32, spec, jpeg=True)
+        emit(f"fig4c/jpeg_trained_phi{phi:02d}", 0.0, f"acc={acc:.4f}")
+
+
+def run(emit) -> None:
+    fig4a(emit)
+    fig4b(emit)
+    fig4c(emit)

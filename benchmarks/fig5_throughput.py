@@ -1,0 +1,87 @@
+"""Paper Fig. 5: training and inference throughput, spatial vs JPEG domain.
+
+The paper's headline: JPEG-domain inference is notably faster (no
+decompression, precomputed operators); training is marginally faster.  On
+CPU we measure the same quantities end-to-end, *including* the JPEG
+decompression step for the spatial model (its inputs are compressed files
+— decoding is part of its serving cost, exactly the paper's point).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convert as CV
+from repro.core import jpeg as J
+from repro.core import resnet as R
+from benchmarks.common import time_fn
+from repro.data.synthetic import image_batch
+
+BATCH = 40  # the paper's batch size
+SPEC = R.ResNetSpec(widths=(8, 12, 16), num_classes=10)
+
+
+def run(emit) -> None:
+    params, state = R.init_resnet(jax.random.PRNGKey(0), SPEC)
+    d = image_batch(0, 0, BATCH, 32, 3, 10)
+    x = jnp.asarray(d["images"])
+    y = jnp.asarray(d["labels"])
+    coef = jnp.moveaxis(J.jpeg_encode(x, quality=50, scaled=True), 1, 3)
+
+    # ---- inference: JPEG coefficients in, logits out ---------------------
+    model = CV.convert(params, state, SPEC)
+    jp_infer = jax.jit(model.__call__)
+
+    def sp_infer_from_jpeg(c):
+        img = J.jpeg_decode(jnp.moveaxis(c, 3, 1), quality=50, scaled=True)
+        return R.spatial_apply(params, state, img, training=False,
+                               spec=SPEC)[0]
+
+    sp_infer = jax.jit(sp_infer_from_jpeg)
+    t_sp = time_fn(sp_infer, coef)
+    t_jp = time_fn(jp_infer, coef)
+    emit("fig5/infer_spatial", t_sp, f"img_per_s={BATCH / (t_sp / 1e6):.1f}")
+    emit("fig5/infer_jpeg_materialized", t_jp,
+         f"img_per_s={BATCH / (t_jp / 1e6):.1f}")
+
+    # beyond-paper variant: factored J∘C∘J̃ application (never forms Ξ)
+    import repro.core.conv as conv_mod
+    old_limit = conv_mod.MATERIALIZE_LIMIT
+    conv_mod.MATERIALIZE_LIMIT = 0
+    try:
+        jp_fact = jax.jit(lambda c: R.jpeg_apply(
+            params, state, c, training=False, spec=SPEC)[0])
+        t_jf = time_fn(jp_fact, coef)
+    finally:
+        conv_mod.MATERIALIZE_LIMIT = old_limit
+    emit("fig5/infer_jpeg_factored", t_jf,
+         f"img_per_s={BATCH / (t_jf / 1e6):.1f}")
+    emit("fig5/infer_speedup_materialized", 0.0, f"{t_sp / t_jp:.2f}x")
+    emit("fig5/infer_speedup_factored", 0.0, f"{t_sp / t_jf:.2f}x")
+
+    # ---- training step ----------------------------------------------------
+    @jax.jit
+    def sp_train(params, c, y):
+        def loss_fn(p):
+            img = J.jpeg_decode(jnp.moveaxis(c, 3, 1), quality=50, scaled=True)
+            logits, st = R.spatial_apply(p, state, img, training=True,
+                                         spec=SPEC)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+        g = jax.grad(loss_fn)(params)
+        return jax.tree.map(lambda p, gg: p - 1e-3 * gg, params, g)
+
+    @jax.jit
+    def jp_train(params, c, y):
+        def loss_fn(p):
+            logits, st = R.jpeg_apply(p, state, c, training=True, spec=SPEC)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+        g = jax.grad(loss_fn)(params)
+        return jax.tree.map(lambda p, gg: p - 1e-3 * gg, params, g)
+
+    t_sp_t = time_fn(sp_train, params, coef, y, iters=2)
+    t_jp_t = time_fn(jp_train, params, coef, y, iters=2)
+    emit("fig5/train_spatial", t_sp_t, f"img_per_s={BATCH / (t_sp_t / 1e6):.1f}")
+    emit("fig5/train_jpeg", t_jp_t, f"img_per_s={BATCH / (t_jp_t / 1e6):.1f}")
+    emit("fig5/train_speedup", 0.0, f"{t_sp_t / t_jp_t:.2f}x")

@@ -1,0 +1,193 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(the dry-run HLO is the per-device SPMD module, so per-device quantities
+come straight out of the trip-count-aware analyzer).  Also reported:
+MODEL_FLOPS = 6·N(active)·D (train) / 2·N·D (inference) and the useful-
+compute ratio MODEL_FLOPS / (HLO_FLOPs × devices), plus the dominant term
+and a rule-derived note on what would move it.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPES, get_config
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link (assume 1 link-equivalent)
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def param_counts(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from the config (analytic)."""
+    if cfg.family == "jpeg_resnet":
+        n = 0.0
+        cin = cfg.in_channels
+        widths = list(cfg.widths)
+        n += widths[0] * cin * 9
+        prev = widths[0]
+        for w in widths:
+            for b in range(cfg.blocks_per_stage):
+                n += w * prev * 9 + w * w * 9 + (w * prev if prev != w else 0)
+                prev = w
+        n += prev * cfg.num_classes
+        return n, n
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    n = v * d * (1 if cfg.tie_embeddings else 2)
+    from repro.models.transformer import layer_kinds
+    expert_total = 0.0
+    for mixer, ffn in layer_kinds(cfg):
+        if mixer == "attn":
+            n += d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+        elif mixer == "mamba":
+            di = cfg.expand * d
+            dtr = -(-d // 16)
+            n += d * 2 * di + di * (dtr + 2 * cfg.d_state) + dtr * di \
+                + di * cfg.d_state + di * d + cfg.d_conv * di
+        elif mixer == "rwkv":
+            n += 5 * d * d + d * (5 * 32) + d * 64 + 64 * d
+        if ffn == "dense":
+            n += 3 * d * f if cfg.family != "audio" else 2 * d * f
+        elif ffn == "moe":
+            layer_experts = cfg.n_experts * 3 * d * f
+            n += layer_experts + d * cfg.n_experts
+            expert_total += layer_experts
+        elif ffn == "rwkv_cm":
+            n += d * f + f * d + d * d
+    if cfg.encoder_decoder:
+        # encoder stack + the decoder's cross-attention projections
+        n += cfg.n_encoder_layers * (d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+                                     + 2 * d * f)
+        n += cfg.n_layers * (d * cfg.q_dim * 2 + d * cfg.kv_dim * 2)
+    active = n
+    if cfg.n_experts and cfg.experts_per_token:
+        active = n - expert_total * (1 - cfg.experts_per_token / cfg.n_experts)
+    return float(n), float(active)
+
+
+def model_flops(cfg, shape) -> float | None:
+    """6·N_active·D for train, 2·N_active·D for inference (global)."""
+    total, active = param_counts(cfg)
+    if cfg.family == "jpeg_resnet":
+        if shape.kind != "train":
+            return None
+        # conv nets: ~2·params·pixels per position is meaningless; use
+        # 6 · MACs: approximate MACs = sum over layers of k²·cin·cout·H·W
+        # folded into param_counts × spatial positions at full res / 4 avg.
+        positions = (cfg.image_size // 8) ** 2 * 64
+        return 6.0 * total * positions / 4 * shape.global_batch / 1.0
+    if cfg.encoder_decoder and shape.kind == "decode":
+        # decode touches decoder params only (encoder ran at prefill)
+        d, f = cfg.d_model, cfg.d_ff
+        enc_params = cfg.n_encoder_layers * (
+            d * cfg.q_dim * 2 + d * cfg.kv_dim * 2 + 2 * d * f)
+        return 2.0 * (active - enc_params) * shape.global_batch
+    if cfg.encoder_decoder:
+        enc, dec = shape.seq_len, max(shape.seq_len // 8, 8)
+        tokens = (enc + dec) * shape.global_batch
+    elif shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.seq_len * shape.global_batch
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def note_for(bottleneck: str, cfg, shape) -> str:
+    if bottleneck == "collective":
+        if cfg.n_experts:
+            return ("shrink the MoE TP all-reduce (expert-parallel a2a or "
+                    "wider expert sharding) / overlap with expert compute")
+        return ("overlap the DP gradient reduce-scatter with backward and "
+                "keep TP collectives inside the layer (latency-hiding)")
+    if bottleneck == "memory":
+        if shape.kind == "decode":
+            return ("decode is KV-bound: quantize the cache (int8) or batch "
+                    "more sequences per step to amortise cache reads")
+        return "fuse elementwise chains and keep activations bf16"
+    return "compute-bound: increase arithmetic intensity only via bigger tiles"
+
+
+def rows(mesh_filter: str | None = None) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "*.json"))):
+        r = json.load(open(path))
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        arch, shape_name = r["arch"], r["shape"]
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        row = {"arch": arch, "shape": shape_name, "mesh": r["mesh"],
+               "status": r["status"]}
+        if r["status"] != "ok":
+            out.append(row)
+            continue
+        hc = r["hlo_cost"]
+        n_dev = r["devices"]
+        compute_s = hc["flops"] / PEAK_FLOPS
+        # Memory term: trip-count-aware, TPU-fusion-modeled bytes (see
+        # repro.launch.hlo_analysis — non-fusable ops' operands+outputs).
+        memory_s = hc["bytes"] / HBM_BW
+        coll_s = hc["collective_bytes"] / LINK_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        bottleneck = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape)
+        ratio = (mf / (hc["flops"] * n_dev)) if mf else None
+        frac = compute_s / max(terms.values()) if max(terms.values()) else 0.0
+        row.update({
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "bottleneck": bottleneck,
+            "model_flops": mf, "useful_ratio": ratio,
+            "roofline_fraction": frac,
+            "mem_gb": (r["memory"]["argument_bytes"]
+                       + r["memory"]["temp_bytes"]) / 1e9,
+            "note": note_for(bottleneck, cfg, shape),
+        })
+        out.append(row)
+    return out
+
+
+def write_markdown(path: str, mesh: str = "single") -> None:
+    rs = rows(mesh)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| useful ratio | roofline frac | mem GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — | — |")
+            continue
+        ratio = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck']} | {ratio} | {r['roofline_fraction']:.2f} | "
+            f"{r['mem_gb']:.1f} |")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def run(emit) -> None:
+    ok = 0
+    for r in rows("single"):
+        if r["status"] != "ok":
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0, r["status"])
+            continue
+        ok += 1
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.2f}")
+    emit("roofline/cells_ok", 0.0, str(ok))

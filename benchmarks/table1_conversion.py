@@ -1,0 +1,46 @@
+"""Paper Table 1: model-conversion accuracy parity.
+
+The paper trains 100 spatial models per dataset and shows identical
+spatial/JPEG test accuracy to ~1e-6.  CPU-scaled: N seeds × a small
+ResNet on the synthetic corpus; we report both accuracies and the max
+|deviation| in accuracy and logits.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import convert as CV
+from repro.core import resnet as R
+from benchmarks.common import eval_accuracy, time_fn, train_spatial_resnet
+
+N_SEEDS = 3
+SPEC = R.ResNetSpec(widths=(8, 12, 16), num_classes=10)
+
+
+def run(emit) -> None:
+    acc_dev, logit_dev = 0.0, 0.0
+    accs = []
+    for seed in range(N_SEEDS):
+        params, state = train_spatial_resnet(SPEC, steps=100, batch=32,
+                                             seed=seed)
+        sp_fwd = jax.jit(lambda x: R.spatial_apply(
+            params, state, x, training=False, spec=SPEC)[0])
+        model, dev = CV.convert_and_verify(
+            params, state, SPEC,
+            jax.random.normal(jax.random.PRNGKey(0), (4, 3, 32, 32)) * 0.3)
+        logit_dev = max(logit_dev, dev)
+        jp_fwd = jax.jit(model.__call__)
+        acc_sp = eval_accuracy(sp_fwd, 4, 32, SPEC)
+        acc_jp = eval_accuracy(jp_fwd, 4, 32, SPEC, jpeg=True)
+        accs.append((acc_sp, acc_jp))
+        acc_dev = max(acc_dev, abs(acc_sp - acc_jp))
+    mean_sp = float(np.mean([a for a, _ in accs]))
+    mean_jp = float(np.mean([b for _, b in accs]))
+    emit("table1/spatial_accuracy", 0.0, f"{mean_sp:.4f}")
+    emit("table1/jpeg_accuracy", 0.0, f"{mean_jp:.4f}")
+    emit("table1/max_accuracy_deviation", 0.0, f"{acc_dev:.2e}")
+    emit("table1/max_logit_deviation", 0.0, f"{logit_dev:.2e}")

@@ -1,0 +1,30 @@
+"""Train one of the assigned LM architectures (reduced config) on the
+synthetic bigram corpus — the same trainer the production mesh uses.
+
+    PYTHONPATH=src python examples/lm_train.py --arch mixtral-8x7b --steps 60
+"""
+import argparse
+
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    ns = argparse.Namespace(
+        arch=args.arch, reduced=True, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=2e-3, optimizer="adamw", seed=0,
+        ckpt_dir=f"/tmp/lm_{args.arch}", ckpt_every=0, keep=2, resume=False,
+        log_every=10, straggler_factor=3.0, metrics_out=None,
+    )
+    result = train_loop(ns)
+    print(f"{args.arch}: loss {result['losses'][0][1]:.3f} -> "
+          f"{result['losses'][-1][1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

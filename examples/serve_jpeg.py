@@ -1,0 +1,25 @@
+"""Batched JPEG-classification service (the paper's deployment story):
+clients ship entropy-decoded JPEG coefficients; the service never
+decompresses.
+
+    PYTHONPATH=src python examples/serve_jpeg.py
+"""
+import argparse
+
+from repro.launch.serve import serve_jpeg_resnet
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    ns = argparse.Namespace(arch="jpeg-resnet", reduced=True,
+                            batch=args.batch, requests=args.requests,
+                            ctx=0, max_new=0, seed=0)
+    out = serve_jpeg_resnet(ns)
+    print(f"served {out['images']} images at {out['images_per_s']:.1f} img/s")
+
+
+if __name__ == "__main__":
+    main()

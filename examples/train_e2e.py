@@ -1,0 +1,40 @@
+"""End-to-end driver: train the paper's JPEG-domain ResNet for a few
+hundred steps on the synthetic corpus, with checkpointing and resume.
+
+This is the framework's full training path (fault-tolerant trainer,
+checkpoint manager, data pipeline) pointed at the paper's own
+architecture — losses drop well below chance within ~100 steps.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="/tmp/jpeg_resnet_e2e")
+    args = ap.parse_args()
+
+    ns = argparse.Namespace(
+        arch="jpeg-resnet", reduced=True, steps=args.steps,
+        batch=args.batch, seq=0, lr=3e-3, optimizer="adamw", seed=0,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, keep=3, resume=True,
+        log_every=20, straggler_factor=3.0, metrics_out=None,
+    )
+    result = train_loop(ns)
+    first = result["losses"][0][1]
+    last = result["losses"][-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} over {result['steps_run']} steps "
+          f"({result['wall_s']:.0f}s); stragglers logged: "
+          f"{len(result['stragglers'])}")
+    if last >= first:
+        sys.exit("loss did not improve")
+
+
+if __name__ == "__main__":
+    main()

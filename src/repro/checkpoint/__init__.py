@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpoint manager."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,13 @@
+"""Architecture configs: one module per assigned architecture + the paper's."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    TrainConfig,
+    get_config,
+    list_archs,
+    reduced_config,
+    register,
+)

@@ -1,0 +1,179 @@
+"""Config dataclasses + registry for every selectable architecture.
+
+``get_config(arch_id)`` returns the full published configuration;
+``reduced_config(arch_id)`` returns a tiny same-family config for CPU smoke
+tests.  Input shapes (the assigned shape set) live in ``SHAPES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "TrainConfig", "MeshConfig", "RunConfig",
+    "SHAPES", "register", "get_config", "reduced_config", "list_archs",
+]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | hybrid | ssm | audio | jpeg_resnet
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1          # MoE FFN on layers where (i % moe_every) == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    # --- attention ---
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None
+    attn_every: int = 1         # hybrid: attention on layers where (i % attn_every) == attn_offset
+    attn_offset: int = 0
+    use_rope: bool = True
+    # --- SSM ---
+    ssm_kind: Optional[str] = None  # 'mamba' | 'rwkv6'
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    rwkv_head_size: int = 64
+    # --- encoder-decoder / multimodal ---
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    cross_attention: bool = False
+    vision_prefix_len: int = 0   # stub patch embeddings prepended to tokens
+    frontend_stub: bool = False  # inputs are precomputed frame embeddings
+    encoder_context_len: int = 1500  # fixed encoder output length for decode
+    # --- jpeg-resnet ---
+    image_size: int = 32
+    in_channels: int = 3
+    widths: tuple[int, ...] = ()
+    blocks_per_stage: int = 1
+    num_classes: int = 10
+    asm_phi: int = 14
+    # --- numerics ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""  # provenance note: [source; verified-tier]
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def is_attn_layer(self, i: int) -> bool:
+        return (i % self.attn_every) == self.attn_offset
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.n_experts > 0 and (i % self.moe_every) == self.moe_offset
+
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve a 500k-token context (bounded attention state)?"""
+        if self.family in ("ssm",):
+            return True
+        if self.family == "hybrid":
+            return True  # attention minority; cache still bounded? full attn layers
+        return self.sliding_window is not None
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    schedule: str = "cosine"          # 'cosine' | 'linear' | 'constant'
+    optimizer: str = "adamw"          # 'adamw' | 'sgd' | 'lion'
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    grad_compression: str = "none"    # 'none' | 'bf16'
+    zero1: bool = True                # shard optimizer state over data axis
+    remat: str = "full"               # 'none' | 'full' | 'dots'
+    scan_layers: bool = True
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    # (pod, data, model) — single-pod drops the pod axis.
+    pods: int = 2
+    data: int = 16
+    model: int = 16
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    train: TrainConfig = field(default_factory=TrainConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_REDUCED: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str, full: Callable[[], ModelConfig],
+             reduced: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[arch_id] = full
+    _REDUCED[arch_id] = reduced
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def reduced_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    return _REDUCED[arch_id]()
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded() -> None:
+    # Import arch modules lazily to avoid import cycles.
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        granite_3_2b, granite_moe_3b_a800m, internvl2_1b, jamba_v01_52b,
+        jpeg_resnet, mistral_nemo_12b, mixtral_8x7b, rwkv6_7b, smollm_360m,
+        starcoder2_3b, whisper_small,
+    )

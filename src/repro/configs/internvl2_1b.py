@@ -1,0 +1,31 @@
+"""InternVL2-1B [arXiv:2404.16821; hf] — Qwen2-0.5B LM tower + InternViT stub.
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed patch embeddings (``vision_prefix_len`` of them) prepended to
+the token sequence.  The beyond-paper JPEG-domain patch embedding
+(``core.transform_linear.fold_patch_embed``) is available behind
+``vision_jpeg_domain`` in tests.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b", family="vlm",
+        n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, head_dim=64,
+        d_ff=4864, vocab_size=151655, rope_theta=1_000_000.0,
+        tie_embeddings=True, vision_prefix_len=256, frontend_stub=True,
+        source="[arXiv:2404.16821; hf] InternViT + InternLM2/Qwen2 tower",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b-reduced", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512, vision_prefix_len=16, frontend_stub=True,
+        tie_embeddings=True, dtype="float32",
+    )
+
+
+register("internvl2-1b", full, reduced)

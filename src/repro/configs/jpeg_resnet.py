@@ -1,0 +1,29 @@
+"""The paper's own architecture: JPEG transform-domain ResNet (Fig. 3).
+
+``full()`` is an ImageNet-scale variant used for the extra (beyond the 40
+mandated LM cells) dry-run/roofline story of the paper's technique itself;
+``reduced()`` is the paper's CIFAR-scale network.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="jpeg-resnet", family="jpeg_resnet",
+        image_size=256, in_channels=3, widths=(64, 128, 256, 512),
+        blocks_per_stage=2, num_classes=1000, asm_phi=14,
+        dtype="float32",
+        source="[arXiv:1812.11690] scaled-up paper Fig. 3",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="jpeg-resnet-reduced", family="jpeg_resnet",
+        image_size=32, in_channels=3, widths=(16, 32, 64),
+        blocks_per_stage=1, num_classes=10, asm_phi=14, dtype="float32",
+        source="[arXiv:1812.11690] paper Fig. 3",
+    )
+
+
+register("jpeg-resnet", full, reduced)

@@ -1,0 +1,34 @@
+"""Whisper-small [arXiv:2212.04356; unverified] — enc-dec, conv frontend STUB.
+
+``frontend_stub=True``: the conv1d/mel frontend is replaced by precomputed
+frame embeddings from ``input_specs()`` per the assignment.  Shape mapping
+(DESIGN.md §4): ``train`` shapes use encoder length = seq_len and decoder
+length = seq_len // 8; ``prefill`` = encoder forward; ``decode`` = decoder
+step with a self-attn KV cache of seq_len plus a fixed 1500-frame encoder
+context.  long_500k is skipped (full attention).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small", family="audio",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+        d_ff=3072, vocab_size=51865, use_rope=False,
+        encoder_decoder=True, n_encoder_layers=12, cross_attention=True,
+        frontend_stub=True, encoder_context_len=1500,
+        source="[arXiv:2212.04356; unverified] enc-dec, conv frontend stub",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small-reduced", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512, use_rope=False,
+        encoder_decoder=True, n_encoder_layers=2, cross_attention=True,
+        frontend_stub=True, encoder_context_len=32, dtype="float32",
+    )
+
+
+register("whisper-small", full, reduced)

@@ -1,0 +1,18 @@
+"""The paper's contribution: residual networks in the JPEG transform domain.
+
+Submodules: ``dct`` (transform constants), ``jpeg`` (the linear codec),
+``asm`` (Approximated Spatial Masking), ``conv`` (convolution explosion),
+``batchnorm``, ``pooling``, ``resnet`` (twin spatial/JPEG models),
+``convert`` (model conversion), ``transform_linear`` (generalised folding).
+"""
+from repro.core import (  # noqa: F401
+    asm,
+    batchnorm,
+    conv,
+    convert,
+    dct,
+    jpeg,
+    pooling,
+    resnet,
+    transform_linear,
+)

@@ -1,0 +1,155 @@
+"""Approximated Spatial Masking (ASM) — the paper's §4.2 / Algorithm 2.
+
+ASM applies a *piecewise-linear* function to transform-domain blocks:
+
+1. build a cheap spatial approximation from the lowest ``phi`` frequency
+   bands (optimal truncation, DCT least-squares theorem);
+2. threshold it into binary masks selecting each linear piece;
+3. apply each piece's linear action to the *exact* coefficients via the
+   harmonic mixing tensor H (Eq. 17) and sum the masked results.
+
+For ReLU (``r(x) = nnm(x) * x``), step 3 collapses to masking — values are
+exact wherever the mask is right (paper Fig. 1).
+
+On TPU this is three MXU matmuls per block tile (DESIGN.md §3), not a
+sparse einsum:
+
+    S_approx = F @ R_phi          # (tiles, 64) @ (64, 64), rows>phi zeroed
+    M        = S_approx > 0
+    F'       = ((F @ R) * M) @ R.T   # mask the exact reconstruction
+
+which is algebraically identical to the H-tensor contraction
+``F'_{k'} = H^{k p}_{k'} F_k M_p``.
+
+All functions operate on coefficient tensors of shape ``(..., 64)``
+(zigzag order) in the *unscaled* (orthonormal DCT) convention.  For true
+JPEG-scaled coefficients, the quantization diagonals are folded into the
+reconstruction matrices (Eq. 20) — see ``asm_relu(..., qtable=...)``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+
+__all__ = [
+    "PiecewiseLinear", "RELU", "LEAKY_RELU",
+    "approx_spatial", "nonnegative_mask", "asm_relu", "apx_relu",
+    "asm_piecewise", "AsmConstants", "asm_constants",
+]
+
+EXACT_PHI = dctlib.NBANDS - 1  # 14: all 15 bands -> exact reconstruction
+
+
+class PiecewiseLinear(NamedTuple):
+    """``f(x) = slope_i * x + intercept_i`` on ``[edges[i], edges[i+1])``.
+
+    ``edges`` has ``len(slopes) - 1`` interior breakpoints (monotonic).
+    """
+
+    edges: tuple[float, ...]
+    slopes: tuple[float, ...]
+    intercepts: tuple[float, ...]
+
+
+RELU = PiecewiseLinear(edges=(0.0,), slopes=(0.0, 1.0), intercepts=(0.0, 0.0))
+LEAKY_RELU = PiecewiseLinear(edges=(0.0,), slopes=(0.01, 1.0), intercepts=(0.0, 0.0))
+
+
+class AsmConstants(NamedTuple):
+    """Precomputed matrices closed over by jitted ASM code."""
+
+    recon_phi: np.ndarray  # (64, 64) truncated reconstruction (mask path)
+    recon: np.ndarray      # (64, 64) exact reconstruction
+    recon_t: np.ndarray    # (64, 64) forward DCT back to zigzag coefficients
+
+
+def asm_constants(phi: int, qtable: np.ndarray | None = None) -> AsmConstants:
+    """Build ASM constants; folds quantization scaling if ``qtable`` given.
+
+    With a qtable (JPEG-scaled convention, Eq. 20): de-quantization is folded
+    into both reconstruction matrices and re-quantization into the forward
+    matrix, so callers never touch the tables at runtime.
+    """
+    recon = dctlib.reconstruction_matrix().copy()
+    recon_phi = dctlib.truncated_reconstruction_matrix(phi).copy()
+    recon_t = recon.T.copy()
+    if qtable is not None:
+        q = np.asarray(qtable, np.float64)
+        recon = q[:, None] * recon
+        recon_phi = q[:, None] * recon_phi
+        recon_t = recon_t / q[None, :]
+    return AsmConstants(recon_phi, recon, recon_t)
+
+
+def approx_spatial(coef: jnp.ndarray, phi: int) -> jnp.ndarray:
+    """Truncated spatial reconstruction ``(..., 64 coeff) -> (..., 64 pixel)``."""
+    r_phi = jnp.asarray(dctlib.truncated_reconstruction_matrix(phi), coef.dtype)
+    return coef @ r_phi
+
+
+def nonnegative_mask(coef: jnp.ndarray, phi: int) -> jnp.ndarray:
+    """The paper's ``annm``: approximate nonnegative mask of the block."""
+    return approx_spatial(coef, phi) > 0
+
+
+def asm_relu(
+    coef: jnp.ndarray, phi: int = EXACT_PHI, qtable: np.ndarray | None = None
+) -> jnp.ndarray:
+    """ASM ReLU on ``(..., 64)`` zigzag coefficient tensors (Algorithm 2)."""
+    c = asm_constants(phi, qtable)
+    recon_phi = jnp.asarray(c.recon_phi, coef.dtype)
+    recon = jnp.asarray(c.recon, coef.dtype)
+    recon_t = jnp.asarray(c.recon_t, coef.dtype)
+    mask = (coef @ recon_phi) > 0
+    spatial = coef @ recon
+    return jnp.where(mask, spatial, jnp.zeros_like(spatial)) @ recon_t
+
+
+def apx_relu(
+    coef: jnp.ndarray, phi: int = EXACT_PHI, qtable: np.ndarray | None = None
+) -> jnp.ndarray:
+    """Baseline APX method (paper Fig. 1/4): ReLU *on the approximation*.
+
+    Reconstructs from only ``phi`` bands, applies ReLU to those values, and
+    re-encodes.  Unlike ASM this does not preserve correct pixel values.
+    """
+    c = asm_constants(phi, qtable)
+    approx = coef @ jnp.asarray(c.recon_phi, coef.dtype)
+    return jnp.maximum(approx, 0.0) @ jnp.asarray(c.recon_t, coef.dtype)
+
+
+def asm_piecewise(
+    coef: jnp.ndarray,
+    fn: PiecewiseLinear,
+    phi: int = EXACT_PHI,
+    qtable: np.ndarray | None = None,
+) -> jnp.ndarray:
+    """General ASM for any piecewise-linear ``fn`` (paper §4.2, general case).
+
+    Each piece contributes ``(slope_i * x + intercept_i) * mask_i`` where the
+    piece masks come from the phi-band approximation.  Intercepts are added
+    in the spatial domain (their DCT is the intercept times the DC basis),
+    slopes act on the exact reconstruction.
+    """
+    c = asm_constants(phi, qtable)
+    recon_phi = jnp.asarray(c.recon_phi, coef.dtype)
+    recon = jnp.asarray(c.recon, coef.dtype)
+    recon_t = jnp.asarray(c.recon_t, coef.dtype)
+    approx = coef @ recon_phi
+    spatial = coef @ recon
+    edges = (-np.inf,) + tuple(fn.edges) + (np.inf,)
+    out = jnp.zeros_like(spatial)
+    for i, (slope, intercept) in enumerate(zip(fn.slopes, fn.intercepts)):
+        mask = (approx >= edges[i]) & (approx < edges[i + 1])
+        out = out + jnp.where(mask, slope * spatial + intercept, 0.0)
+    return out @ recon_t
+
+
+def spatial_relu_oracle(coef: jnp.ndarray) -> jnp.ndarray:
+    """Exact result (decode -> ReLU -> encode), for error measurement."""
+    r = jnp.asarray(dctlib.reconstruction_matrix(), coef.dtype)
+    return jnp.maximum(coef @ r, 0.0) @ r.T

@@ -1,0 +1,108 @@
+"""JPEG-domain batch normalization (paper §4.3 / Algorithm 3).
+
+Operates on coefficient activations ``(N, bh, bw, C, 64)`` in the
+orthonormal-DCT convention, where for each block:
+
+* ``coef[..., 0] = 8 * block_mean``  (DC gain of the orthonormal 8×8 DCT);
+* ``mean_k(coef[..., k]^2) = E[x^2]`` over the block's 64 pixels
+  (Parseval / the paper's DCT mean–variance theorem).
+
+So the per-channel spatial statistics are coefficient reductions:
+
+    E[x]   = mean over (N, bh, bw) of coef[..., 0] / 8
+    E[x^2] = mean over (N, bh, bw) of mean_k coef[..., k]^2
+    Var    = E[x^2] - E[x]^2
+
+Centering subtracts ``8·μ`` from the DC coefficient only; scaling is plain
+scalar multiplication (linearity); the shift β adds ``8·β`` to DC.  In the
+JPEG-scaled convention with q₀ = 8 the DC gain is 1 (paper's convention) —
+pass ``dc_gain=1.0``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+
+__all__ = ["BatchNormParams", "BatchNormState", "init_batchnorm", "batchnorm_jpeg",
+           "batchnorm_spatial"]
+
+DC_GAIN = float(dctlib.BLOCK)  # orthonormal DC coefficient = 8 * mean
+
+
+class BatchNormParams(NamedTuple):
+    gamma: jnp.ndarray  # (C,)
+    beta: jnp.ndarray  # (C,)
+
+
+class BatchNormState(NamedTuple):
+    running_mean: jnp.ndarray  # (C,)
+    running_var: jnp.ndarray  # (C,)
+
+
+def init_batchnorm(channels: int, dtype=jnp.float32):
+    params = BatchNormParams(jnp.ones((channels,), dtype), jnp.zeros((channels,), dtype))
+    state = BatchNormState(jnp.zeros((channels,), dtype), jnp.ones((channels,), dtype))
+    return params, state
+
+
+def batchnorm_jpeg(
+    coef: jnp.ndarray,
+    params: BatchNormParams,
+    state: BatchNormState,
+    *,
+    training: bool,
+    momentum: float = 0.1,
+    eps: float = 1e-5,
+    dc_gain: float = DC_GAIN,
+) -> tuple[jnp.ndarray, BatchNormState]:
+    """Batch norm over ``(N, bh, bw, C, 64)`` coefficients (Algorithm 3)."""
+    if training:
+        dc = coef[..., 0] / dc_gain  # per-block means, (N, bh, bw, C)
+        mu = jnp.mean(dc, axis=(0, 1, 2))  # E[x] per channel
+        # mean_k coef^2 over 64 coefficients == E[x^2] per block (orthonormal
+        # basis / the DCT mean-variance theorem, paper Thm. 2).
+        second = jnp.mean(jnp.mean(coef * coef, axis=-1), axis=(0, 1, 2))
+        var = second - mu * mu
+        new_state = BatchNormState(
+            (1 - momentum) * state.running_mean + momentum * mu,
+            (1 - momentum) * state.running_var + momentum * var,
+        )
+    else:
+        mu, var = state.running_mean, state.running_var
+        new_state = state
+    inv = params.gamma / jnp.sqrt(var + eps)
+    # (x - mu) * inv + beta  ==  x * inv + (beta - mu * inv), and a scalar
+    # add is a DC-coefficient add (times the DC gain).
+    shift = (params.beta - mu * inv) * dc_gain
+    out = coef * inv[None, None, None, :, None]
+    out = out.at[..., 0].add(shift[None, None, None, :])
+    return out, new_state
+
+
+def batchnorm_spatial(
+    x: jnp.ndarray,
+    params: BatchNormParams,
+    state: BatchNormState,
+    *,
+    training: bool,
+    momentum: float = 0.1,
+    eps: float = 1e-5,
+) -> tuple[jnp.ndarray, BatchNormState]:
+    """Spatial-domain batch norm over ``(N, C, H, W)`` — the oracle twin."""
+    if training:
+        mu = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.mean(x * x, axis=(0, 2, 3)) - mu * mu
+        new_state = BatchNormState(
+            (1 - momentum) * state.running_mean + momentum * mu,
+            (1 - momentum) * state.running_var + momentum * var,
+        )
+    else:
+        mu, var = state.running_mean, state.running_var
+        new_state = state
+    inv = params.gamma / jnp.sqrt(var + eps)
+    out = (x - mu[None, :, None, None]) * inv[None, :, None, None]
+    out = out + params.beta[None, :, None, None]
+    return out, new_state

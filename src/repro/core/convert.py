@@ -1,0 +1,108 @@
+"""Model conversion: spatial-domain checkpoints → JPEG-domain networks (§4.6).
+
+Because ``repro.core.resnet`` evaluates both domains from one parameter
+pytree, conversion is the identity on parameters plus a *verification*
+contract: at φ = 14 (exact ReLU) the two networks must agree to float
+error (paper Table 1).  ``convert_and_verify`` enforces that contract and
+returns the precomputed-operator bundle for fast inference.
+
+For models trained elsewhere, ``from_torch_layout`` maps common layouts
+(OIHW conv kernels, BN (γ, β, μ, σ²)) into our pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import asm as asmlib
+from repro.core import jpeg as jpeglib
+from repro.core import resnet as resnetlib
+
+__all__ = ["ConvertedModel", "convert", "convert_and_verify", "from_torch_layout"]
+
+
+class ConvertedModel(NamedTuple):
+    params: Any
+    state: Any
+    operators: Any
+    spec: resnetlib.ResNetSpec
+    phi: int
+
+    def __call__(self, coef: jnp.ndarray) -> jnp.ndarray:
+        return resnetlib.jpeg_apply_precomputed(
+            self.params, self.state, self.operators, coef,
+            spec=self.spec, phi=self.phi,
+        )
+
+
+def convert(params, state, spec: resnetlib.ResNetSpec,
+            phi: int = asmlib.EXACT_PHI) -> ConvertedModel:
+    """Convert a (trained) spatial model for JPEG-domain inference."""
+    ops = resnetlib.precompute_operators(params, spec)
+    return ConvertedModel(params, state, ops, spec, phi)
+
+
+def convert_and_verify(
+    params, state, spec: resnetlib.ResNetSpec, sample_images: jnp.ndarray,
+    phi: int = asmlib.EXACT_PHI, atol: float = 1e-4,
+) -> tuple[ConvertedModel, float]:
+    """Convert + assert spatial/JPEG logit agreement on sample images.
+
+    ``sample_images``: (N, C, H, W) pixels.  Returns (model, max_abs_dev).
+    At φ = 14 the deviation is float-accumulation only (paper Table 1:
+    ~1e-6 in accuracy).
+    """
+    model = convert(params, state, spec, phi)
+    logits_sp, _ = resnetlib.spatial_apply(
+        params, state, sample_images, training=False, spec=spec
+    )
+    coef = jpeglib.jpeg_encode(sample_images, quality=spec.quality, scaled=True)
+    coef = jnp.moveaxis(coef, 1, 3)  # (N, bh, bw, C, 64)
+    logits_jp = model(coef)
+    dev = float(jnp.max(jnp.abs(logits_sp - logits_jp)))
+    if phi >= asmlib.EXACT_PHI and dev > atol:
+        raise ValueError(
+            f"conversion verification failed: max logit deviation {dev} > {atol}"
+        )
+    return model, dev
+
+
+def from_torch_layout(tensors: dict[str, Any], spec: resnetlib.ResNetSpec):
+    """Map a {name: array} dict in torch ResNet layout onto our pytree.
+
+    Expected names per block: ``<pre>.conv1.weight`` (OIHW), ``<pre>.bn1.
+    {weight,bias,running_mean,running_var}``, etc.  Purely a relayout —
+    no numerics.
+    """
+    params: dict[str, Any] = {}
+    state: dict[str, Any] = {}
+
+    def grab_bn(src: str, dst: str):
+        params[dst] = {
+            "gamma": jnp.asarray(tensors[f"{src}.weight"]),
+            "beta": jnp.asarray(tensors[f"{src}.bias"]),
+        }
+        state[dst] = {
+            "mean": jnp.asarray(tensors[f"{src}.running_mean"]),
+            "var": jnp.asarray(tensors[f"{src}.running_var"]),
+        }
+
+    params["stem"] = {"kernel": jnp.asarray(tensors["stem.weight"])}
+    grab_bn("stem_bn", "stem_bn")
+    for name, s, cin, w in resnetlib._stages(spec):
+        entry = {
+            "conv1": jnp.asarray(tensors[f"{name}.conv1.weight"]),
+            "conv2": jnp.asarray(tensors[f"{name}.conv2.weight"]),
+        }
+        if f"{name}.proj.weight" in tensors:
+            entry["proj"] = jnp.asarray(tensors[f"{name}.proj.weight"])
+        params[name] = entry
+        grab_bn(f"{name}.bn1", f"{name}_bn1")
+        grab_bn(f"{name}.bn2", f"{name}_bn2")
+    params["head"] = {
+        "w": jnp.asarray(tensors["head.weight"]).T,
+        "b": jnp.asarray(tensors["head.bias"]),
+    }
+    return params, state

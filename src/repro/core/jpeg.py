@@ -1,0 +1,139 @@
+"""The JPEG transform as a linear map (paper §3.2).
+
+The *JPEG transform domain* is the output of step 4 of JPEG encoding:
+blocked, DCT-transformed, zigzag-ordered, quantization-scaled coefficients
+(real-valued — rounding/entropy coding are outside the transform domain).
+
+Layouts
+-------
+Spatial images are ``(..., H, W)``; their transform-domain representation is
+``(..., H/8, W/8, 64)`` — block-row, block-col, zigzag coefficient.  The
+leading axes (batch, channels) are untouched.
+
+Two coefficient conventions are supported (DESIGN.md §7):
+
+* ``scaled=True``  — true step-4 JPEG coefficients (divided by ``q``);
+* ``scaled=False`` — plain orthonormal DCT coefficients ("DCT domain"),
+  the network-internal convention in which quantization diagonals have been
+  folded into the adjacent operators.
+
+``jpeg_tensor``/``ijpeg_tensor`` materialise the paper's ``J``/``J̃``
+tensors explicitly; they are O((HW)²) and exist for tests and for the
+faithful operator-explosion path on small images.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+
+__all__ = [
+    "block_image",
+    "unblock_image",
+    "jpeg_encode",
+    "jpeg_decode",
+    "jpeg_round_trip_lossy",
+    "jpeg_tensor",
+    "ijpeg_tensor",
+]
+
+
+def block_image(img: jnp.ndarray, block: int = dctlib.BLOCK) -> jnp.ndarray:
+    """``(..., H, W) -> (..., H/b, W/b, b, b)`` — the paper's B tensor."""
+    *lead, h, w = img.shape
+    if h % block or w % block:
+        raise ValueError(f"image ({h}x{w}) not divisible into {block}x{block} blocks")
+    img = img.reshape(*lead, h // block, block, w // block, block)
+    return jnp.moveaxis(img, -3, -2)
+
+
+def unblock_image(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`block_image`."""
+    *lead, bh, bw, b1, b2 = blocks.shape
+    blocks = jnp.moveaxis(blocks, -2, -3)
+    return blocks.reshape(*lead, bh * b1, bw * b2)
+
+
+def jpeg_encode(
+    img: jnp.ndarray,
+    *,
+    quality: int = 50,
+    scaled: bool = True,
+    qtable: np.ndarray | None = None,
+) -> jnp.ndarray:
+    """Steps 1–4 of JPEG encoding: ``(..., H, W) -> (..., H/8, W/8, 64)``."""
+    d = jnp.asarray(dctlib.dct_matrix(), img.dtype)
+    zz = dctlib.zigzag_permutation()
+    blocks = block_image(img)
+    coef = jnp.einsum("am,...mn,bn->...ab", d, blocks, d)
+    coef = coef.reshape(*coef.shape[:-2], dctlib.NFREQ)[..., zz]
+    if scaled:
+        q = qtable if qtable is not None else dctlib.quantization_table(quality)
+        coef = coef / jnp.asarray(q, coef.dtype)
+    return coef
+
+
+def jpeg_decode(
+    coef: jnp.ndarray,
+    *,
+    quality: int = 50,
+    scaled: bool = True,
+    qtable: np.ndarray | None = None,
+) -> jnp.ndarray:
+    """Inverse of :func:`jpeg_encode` (no rounding — exact inverse)."""
+    if scaled:
+        q = qtable if qtable is not None else dctlib.quantization_table(quality)
+        coef = coef * jnp.asarray(q, coef.dtype)
+    inv_zz = np.argsort(dctlib.zigzag_permutation())
+    coef = coef[..., inv_zz]
+    coef = coef.reshape(*coef.shape[:-1], dctlib.BLOCK, dctlib.BLOCK)
+    d = jnp.asarray(dctlib.dct_matrix(), coef.dtype)
+    blocks = jnp.einsum("am,...ab,bn->...mn", d, coef, d)
+    return unblock_image(blocks)
+
+
+def jpeg_round_trip_lossy(img: jnp.ndarray, *, quality: int = 50) -> jnp.ndarray:
+    """Lossy JPEG round trip (with step-5 rounding) — for data simulation."""
+    coef = jpeg_encode(img, quality=quality, scaled=True)
+    coef = jnp.round(coef)
+    return jpeg_decode(coef, quality=quality, scaled=True)
+
+
+# --------------------------------------------------------------------------
+# Explicit J / J~ tensors (tests + faithful explosion path; numpy, small images)
+# --------------------------------------------------------------------------
+
+
+def jpeg_tensor(
+    h: int, w: int, *, quality: int = 50, scaled: bool = True
+) -> np.ndarray:
+    """The paper's ``J`` (Eq. 8) as ``(h, w, h/8, w/8, 64)``: pixels->coeffs."""
+    b = dctlib.BLOCK
+    r = dctlib.reconstruction_matrix()  # (64 zigzag coef, 64 flat pixel)
+    fwd = r.T.copy()  # (pixel, coef): forward DCT in zigzag order
+    if scaled:
+        fwd = fwd / dctlib.quantization_table(quality)[None, :]
+    j = np.zeros((h, w, h // b, w // b, b * b))
+    for x in range(h // b):
+        for y in range(w // b):
+            for m in range(b):
+                for n in range(b):
+                    j[x * b + m, y * b + n, x, y, :] = fwd[m * b + n]
+    return j
+
+
+def ijpeg_tensor(
+    h: int, w: int, *, quality: int = 50, scaled: bool = True
+) -> np.ndarray:
+    """The paper's ``J̃`` (Eq. 10) as ``(h/8, w/8, 64, h, w)``: coeffs->pixels."""
+    b = dctlib.BLOCK
+    rec = dctlib.reconstruction_matrix()  # (coef, pixel)
+    if scaled:
+        rec = rec * dctlib.quantization_table(quality)[:, None]
+    jt = np.zeros((h // b, w // b, b * b, h, w))
+    for x in range(h // b):
+        for y in range(w // b):
+            blk = rec.reshape(b * b, b, b)
+            jt[x, y, :, x * b : (x + 1) * b, y * b : (y + 1) * b] = blk
+    return jt

@@ -1,0 +1,29 @@
+"""JPEG-domain pooling and residual addition (paper §4.4, §4.5).
+
+* Component-wise (residual) addition is identity-cost by linearity.
+* Global average pooling reads DC coefficients: the mean over the image is
+  the mean of per-block means, and when the feature map is a single block
+  it is one unconditional read per channel (paper Fig. 2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.batchnorm import DC_GAIN
+
+__all__ = ["residual_add", "global_avg_pool_jpeg", "global_avg_pool_spatial"]
+
+
+def residual_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """J(F + G) = J(F) + J(G) — Eq. 25."""
+    return a + b
+
+
+def global_avg_pool_jpeg(coef: jnp.ndarray, *, dc_gain: float = DC_GAIN) -> jnp.ndarray:
+    """``(N, bh, bw, C, 64) -> (N, C)``: channel-wise mean via DC reads."""
+    return jnp.mean(coef[..., 0], axis=(1, 2)) / dc_gain
+
+
+def global_avg_pool_spatial(x: jnp.ndarray) -> jnp.ndarray:
+    """``(N, C, H, W) -> (N, C)`` — the spatial oracle."""
+    return jnp.mean(x, axis=(2, 3))

@@ -1,0 +1,247 @@
+"""Residual networks in the spatial and JPEG transform domains (paper §4).
+
+One parameter pytree drives *two* mathematically-equivalent apply functions:
+
+* :func:`spatial_apply` — ordinary NCHW ResNet (the oracle / source model);
+* :func:`jpeg_apply` — the same network evaluated entirely on JPEG
+  coefficients: exploded convolutions (§4.1), ASM ReLU (§4.2), coefficient
+  batch-norm (§4.3), free residual adds (§4.4), DC-read global pooling
+  (§4.5).
+
+Model conversion (§4.6) is therefore *structural*: a spatial checkpoint is a
+JPEG checkpoint.  ``precompute_operators`` bakes the exploded Ξ operators
+for inference so each step is matmuls only (the paper's "the map can be
+precomputed to speed up inference").
+
+Architecture (paper Fig. 3, generalised): a stem conv, then ``len(widths)``
+stages of ``blocks_per_stage`` basic residual blocks; every stage after the
+first downsamples by 2 so a 32×32 input with 3 stages ends at a single JPEG
+block; global average pool; linear classifier.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import asm as asmlib
+from repro.core import batchnorm as bnlib
+from repro.core import conv as convlib
+from repro.core import jpeg as jpeglib
+from repro.core import pooling as poollib
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "ResNetSpec",
+    "init_resnet",
+    "spatial_apply",
+    "jpeg_apply",
+    "precompute_operators",
+    "jpeg_apply_precomputed",
+]
+
+
+class ResNetSpec(NamedTuple):
+    in_channels: int = 3
+    widths: tuple[int, ...] = (16, 32, 64)
+    blocks_per_stage: int = 1
+    num_classes: int = 10
+    quality: int = 50  # quantization table the input coefficients use
+    phi: int = asmlib.EXACT_PHI  # ASM ReLU spatial frequencies
+
+
+def _conv_init(key, cout, cin, r, dtype):
+    fan_in = cin * r * r
+    return jax.random.normal(key, (cout, cin, r, r), dtype) * np.sqrt(2.0 / fan_in)
+
+
+def init_resnet(key: jax.Array, spec: ResNetSpec, dtype=jnp.float32):
+    """Returns ``(params, state)`` pytrees shared by both domains."""
+    keys = iter(jax.random.split(key, 4 + 4 * len(spec.widths) * spec.blocks_per_stage))
+    params: dict[str, Any] = {}
+    state: dict[str, Any] = {}
+
+    def bn(name, c):
+        p, s = bnlib.init_batchnorm(c, dtype)
+        params[name] = {"gamma": p.gamma, "beta": p.beta}
+        state[name] = {"mean": s.running_mean, "var": s.running_var}
+
+    params["stem"] = {"kernel": _conv_init(next(keys), spec.widths[0], spec.in_channels, 3, dtype)}
+    bn("stem_bn", spec.widths[0])
+    cin = spec.widths[0]
+    for si, w in enumerate(spec.widths):
+        stride = 1 if si == 0 else 2
+        for bi in range(spec.blocks_per_stage):
+            pre = f"s{si}b{bi}"
+            s = stride if bi == 0 else 1
+            params[pre] = {
+                "conv1": _conv_init(next(keys), w, cin, 3, dtype),
+                "conv2": _conv_init(next(keys), w, w, 3, dtype),
+            }
+            bn(pre + "_bn1", w)
+            bn(pre + "_bn2", w)
+            if s != 1 or cin != w:
+                params[pre]["proj"] = _conv_init(next(keys), w, cin, 1, dtype)
+            cin = w
+    params["head"] = {
+        "w": jax.random.normal(next(keys), (cin, spec.num_classes), dtype)
+        * np.sqrt(1.0 / cin),
+        "b": jnp.zeros((spec.num_classes,), dtype),
+    }
+    return params, state
+
+
+def _stages(spec: ResNetSpec):
+    cin = spec.widths[0]
+    for si, w in enumerate(spec.widths):
+        stride = 1 if si == 0 else 2
+        for bi in range(spec.blocks_per_stage):
+            s = stride if bi == 0 else 1
+            yield f"s{si}b{bi}", s, cin, w
+            cin = w
+
+
+# --------------------------------------------------------------------------
+# Spatial-domain apply (oracle)
+# --------------------------------------------------------------------------
+
+
+def spatial_apply(params, state, x, *, training: bool, spec: ResNetSpec):
+    """``x``: (N, C, H, W) pixels -> (logits, new_state)."""
+    new_state = {}
+
+    def bn(name, h):
+        p = bnlib.BatchNormParams(params[name]["gamma"], params[name]["beta"])
+        s = bnlib.BatchNormState(state[name]["mean"], state[name]["var"])
+        h, s2 = bnlib.batchnorm_spatial(h, p, s, training=training)
+        new_state[name] = {"mean": s2.running_mean, "var": s2.running_var}
+        return h
+
+    h = convlib.spatial_conv(x, params["stem"]["kernel"], 1)
+    h = jax.nn.relu(bn("stem_bn", h))
+    for name, s, cin, w in _stages(spec):
+        blk = params[name]
+        short = h
+        if "proj" in blk:
+            short = convlib.spatial_conv(h, blk["proj"], s)
+        h = convlib.spatial_conv(h, blk["conv1"], s)
+        h = jax.nn.relu(bn(name + "_bn1", h))
+        h = convlib.spatial_conv(h, blk["conv2"], 1)
+        h = bn(name + "_bn2", h)
+        h = jax.nn.relu(h + short)
+    pooled = poollib.global_avg_pool_spatial(h)
+    logits = pooled @ params["head"]["w"] + params["head"]["b"]
+    return logits, new_state
+
+
+# --------------------------------------------------------------------------
+# JPEG-domain apply (the paper's network)
+# --------------------------------------------------------------------------
+
+
+def jpeg_apply(params, state, coef, *, training: bool, spec: ResNetSpec,
+               phi: int | None = None, remat: bool = False):
+    """``coef``: (N, bh, bw, C, 64) step-4 JPEG coefficients -> logits.
+
+    Input coefficients are quantization-scaled (true JPEG); the stem conv
+    folds de-quantization (Eq. 20 collapsed across the network); all
+    internal activations use the orthonormal-DCT convention.
+
+    ``remat``: checkpoint each residual block (recompute the ASM/conv
+    intermediates in backward — they are several× the activation size).
+    """
+    phi = spec.phi if phi is None else phi
+    new_state = {}
+
+    def bn_apply(pdict, sdict, h):
+        p = bnlib.BatchNormParams(pdict["gamma"], pdict["beta"])
+        s = bnlib.BatchNormState(sdict["mean"], sdict["var"])
+        return bnlib.batchnorm_jpeg(h, p, s, training=training)
+
+    def bn(name, h):
+        h, s2 = bn_apply(params[name], state[name], h)
+        new_state[name] = {"mean": s2.running_mean, "var": s2.running_var}
+        return h
+
+    def relu(h):
+        return asmlib.asm_relu(h, phi)
+
+    h = convlib.jpeg_conv(coef, params["stem"]["kernel"], 1,
+                          in_scaled=True, quality=spec.quality)
+    h = relu(bn("stem_bn", h))
+    h = shard(h, "batch", None, None, None, None)
+    for name, s, cin, w in _stages(spec):
+
+        def block_fn(h, blk, bn1p, bn1s, bn2p, bn2s):
+            short = h
+            if "proj" in blk:
+                short = convlib.jpeg_conv(h, blk["proj"], s)
+            h = convlib.jpeg_conv(h, blk["conv1"], s)
+            h1, st1 = bn_apply(bn1p, bn1s, h)
+            h = relu(h1)
+            h = convlib.jpeg_conv(h, blk["conv2"], 1)
+            h2, st2 = bn_apply(bn2p, bn2s, h)
+            h = relu(poollib.residual_add(h2, short))
+            h = shard(h, "batch", None, None, None, None)
+            return h, st1, st2
+
+        if remat:
+            block_fn = jax.checkpoint(block_fn)
+        h, st1, st2 = block_fn(h, params[name], params[name + "_bn1"],
+                               state[name + "_bn1"], params[name + "_bn2"],
+                               state[name + "_bn2"])
+        new_state[name + "_bn1"] = {"mean": st1.running_mean, "var": st1.running_var}
+        new_state[name + "_bn2"] = {"mean": st2.running_mean, "var": st2.running_var}
+    pooled = poollib.global_avg_pool_jpeg(h)
+    logits = pooled @ params["head"]["w"] + params["head"]["b"]
+    return logits, new_state
+
+
+# --------------------------------------------------------------------------
+# Precomputed-operator inference (paper §4.1: "can be precomputed")
+# --------------------------------------------------------------------------
+
+
+def precompute_operators(params, spec: ResNetSpec):
+    """Explode every convolution once; returns an operator pytree."""
+    ops = {"stem": convlib.explode(params["stem"]["kernel"], 1,
+                                   in_scaled=True, quality=spec.quality)}
+    for name, s, cin, w in _stages(spec):
+        blk = params[name]
+        entry = {
+            "conv1": convlib.explode(blk["conv1"], s),
+            "conv2": convlib.explode(blk["conv2"], 1),
+        }
+        if "proj" in blk:
+            entry["proj"] = convlib.explode(blk["proj"], s)
+        ops[name] = entry
+    return ops
+
+
+def jpeg_apply_precomputed(params, state, ops, coef, *, spec: ResNetSpec,
+                           phi: int | None = None):
+    """Inference-only apply using precomputed exploded operators."""
+    phi = spec.phi if phi is None else phi
+
+    def bn(name, h):
+        p = bnlib.BatchNormParams(params[name]["gamma"], params[name]["beta"])
+        s = bnlib.BatchNormState(state[name]["mean"], state[name]["var"])
+        h, _ = bnlib.batchnorm_jpeg(h, p, s, training=False)
+        return h
+
+    h = convlib.apply_exploded(coef, ops["stem"], 1)
+    h = asmlib.asm_relu(bn("stem_bn", h), phi)
+    for name, s, cin, w in _stages(spec):
+        blk, op = params[name], ops[name]
+        short = h
+        if "proj" in blk:
+            short = convlib.apply_exploded(h, op["proj"], s)
+        h = convlib.apply_exploded(h, op["conv1"], s)
+        h = asmlib.asm_relu(bn(name + "_bn1", h), phi)
+        h = convlib.apply_exploded(h, op["conv2"], 1)
+        h = bn(name + "_bn2", h)
+        h = asmlib.asm_relu(h + short, phi)
+    pooled = poollib.global_avg_pool_jpeg(h)
+    return pooled @ params["head"]["w"] + params["head"]["b"]

@@ -1,0 +1,76 @@
+"""Generalised transform-domain linear folding (beyond-paper, DESIGN.md §4).
+
+The paper's core precondition is a *fixed invertible linear codec* ``T`` in
+front of a *learned linear* layer ``W``: then ``W ∘ T⁻¹`` is one matrix and
+the network consumes codec coefficients directly.  This module packages
+that insight for non-CNN frontends:
+
+* :func:`fold_patch_embed` — ViT patch embedding over JPEG coefficients:
+  a patch-embed projection ``W: (P·P·C) -> d`` becomes a projection from
+  the patch's JPEG blocks' coefficients (InternVL2 / any ViT whose patch
+  size is a multiple of 8).  Exact — no approximation anywhere.
+* :func:`fold_frontend` — generic: fold any fixed linear analysis map
+  (mel filterbank, learned PCA, …) into a following linear layer.
+
+Both return plain arrays to be used as drop-in weights.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+
+__all__ = ["fold_patch_embed", "unfold_patches_to_blocks", "fold_frontend"]
+
+
+def fold_frontend(analysis: jnp.ndarray, weight: jnp.ndarray) -> jnp.ndarray:
+    """Fold ``y = W @ (A⁻¹ c)`` into one matrix given orthonormal ``A``.
+
+    ``analysis``: (n, n) orthonormal analysis map (rows = basis functions),
+    ``weight``: (n, d) layer weight acting on raw samples.  Returns the
+    (n, d) weight acting on coefficients: ``Aᵀ⁻¹ = A`` for orthonormal maps,
+    so the folded weight is ``A @ weight``.
+    """
+    return analysis @ weight
+
+
+def fold_patch_embed(
+    weight: jnp.ndarray, patch: int, channels: int, *,
+    quality: int = 50, scaled: bool = True,
+) -> jnp.ndarray:
+    """Fold JPEG decoding into a ViT patch-embed projection.
+
+    ``weight``: (patch*patch*channels, d) acting on row-major (C, P, P)
+    pixel patches.  ``patch`` must be a multiple of 8.  Returns a weight of
+    the same shape acting on the patch's JPEG coefficients laid out as
+    (C, P//8, P//8, 64) — exactly what ``jpeg_encode`` emits per patch.
+
+    The fold is ``W_jpeg[k, :] = Σ_p  J̃[k, p] · W[p, :]`` with the
+    block-diagonal J̃; implemented per 8×8 block via the reconstruction
+    matrix (plus de-quantization when ``scaled``).
+    """
+    b = dctlib.BLOCK
+    if patch % b:
+        raise ValueError("patch size must be a multiple of 8")
+    g = patch // b
+    d = weight.shape[-1]
+    rec = dctlib.reconstruction_matrix()  # (64 coef, 64 pixel)
+    if scaled:
+        rec = dctlib.quantization_table(quality)[:, None] * rec
+    rec = jnp.asarray(rec, weight.dtype)
+    # (C, P, P, d) -> blocks (C, g, g, 64pix, d) -> coefficients
+    w = weight.reshape(channels, g, b, g, b, d)
+    w = jnp.moveaxis(w, 2, 3).reshape(channels, g, g, b * b, d)
+    w = jnp.einsum("kp,cxypd->cxykd", rec, w)
+    return w.reshape(channels * g * g * b * b, d)
+
+
+def unfold_patches_to_blocks(images: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """``(N, C, H, W) -> (N, n_patches, C*P*P)`` row-major patches (oracle)."""
+    n, c, h, w = images.shape
+    gh, gw = h // patch, w // patch
+    x = images.reshape(n, c, gh, patch, gw, patch)
+    x = jnp.moveaxis(x, 4, 3)  # (n, c, gh, gw, P, P)
+    x = jnp.moveaxis(x, 1, 3)  # (n, gh, gw, c, P, P)
+    return x.reshape(n, gh * gw, c * patch * patch)

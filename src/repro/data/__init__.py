@@ -1,0 +1,8 @@
+"""Synthetic data + checkpointable input pipeline."""
+from repro.data.pipeline import (  # noqa: F401
+    DataIterator,
+    image_iterator,
+    jpeg_iterator,
+    prefetch,
+    token_iterator,
+)

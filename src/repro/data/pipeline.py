@@ -1,0 +1,102 @@
+"""Checkpointable, shardable input pipeline.
+
+``DataIterator`` is a pure function of (seed, step): its checkpoint state is
+two integers, giving exactly-once semantics across restarts and *elastic*
+re-sharding (a restarted job with a different data-parallel size replays
+from the same global step).  ``prefetch`` overlaps host batch synthesis
+with device compute via a background thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.data import synthetic
+from repro.core import jpeg as jpeglib
+
+__all__ = ["DataIterator", "token_iterator", "image_iterator", "jpeg_iterator",
+           "prefetch"]
+
+
+@dataclass
+class DataIterator:
+    """Stateful wrapper over a pure (seed, index) -> batch function."""
+
+    fn: Callable[[int, int], dict[str, np.ndarray]]
+    seed: int
+    step: int = 0
+
+    def __iter__(self) -> "DataIterator":
+        return self
+
+    def __next__(self) -> dict[str, np.ndarray]:
+        batch = self.fn(self.seed, self.step)
+        self.step += 1
+        return batch
+
+    # -- checkpointing ----------------------------------------------------
+    def state_dict(self) -> dict[str, int]:
+        return {"seed": self.seed, "step": self.step}
+
+    def load_state_dict(self, state: dict[str, int]) -> None:
+        self.seed = int(state["seed"])
+        self.step = int(state["step"])
+
+
+def token_iterator(seed: int, batch: int, seq_len: int, vocab: int) -> DataIterator:
+    def fn(s, i):
+        b = synthetic.token_batch(s, i, batch, seq_len, vocab)
+        toks = b["tokens"]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    return DataIterator(fn, seed)
+
+
+def image_iterator(seed: int, batch: int, size: int, channels: int = 3,
+                   num_classes: int = 10) -> DataIterator:
+    def fn(s, i):
+        return synthetic.image_batch(s, i, batch, size, channels, num_classes)
+    return DataIterator(fn, seed)
+
+
+def jpeg_iterator(seed: int, batch: int, size: int, channels: int = 3,
+                  num_classes: int = 10, quality: int = 50,
+                  lossy: bool = False) -> DataIterator:
+    """Images pre-encoded to step-4 JPEG coefficients (N, bh, bw, C, 64).
+
+    ``lossy=True`` applies step-5 rounding — the real-data regime; the
+    paper's parity experiments use lossless coefficients.
+    """
+    def fn(s, i):
+        b = synthetic.image_batch(s, i, batch, size, channels, num_classes)
+        coef = jpeglib.jpeg_encode(b["images"], quality=quality, scaled=True)
+        if lossy:
+            coef = np.round(coef)
+        coef = np.moveaxis(np.asarray(coef, np.float32), 1, 3)
+        return {"coefficients": coef, "labels": b["labels"]}
+    return DataIterator(fn, seed)
+
+
+def prefetch(it: Iterator[Any], depth: int = 2) -> Iterator[Any]:
+    """Background-thread prefetch — overlaps host data synthesis with step."""
+    q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+    sentinel = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(sentinel)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is sentinel:
+            return
+        yield item

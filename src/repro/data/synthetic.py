@@ -1,0 +1,79 @@
+"""Deterministic synthetic corpora (offline container — no downloads).
+
+* Token streams: zipfian unigrams with injected bigram structure so a small
+  LM can visibly learn (loss drops below unigram entropy).
+* Image corpora: frequency-shaped Gaussian fields (power-law spectra per
+  class) whose statistics resemble natural images — the paper's Fig. 4a
+  notes fully-random blocks are a DCT worst case, so class-dependent
+  low-frequency structure makes classification learnable and keeps DCT
+  energy compaction realistic.
+
+Everything is a pure function of (seed, index): infinitely re-playable and
+exactly resumable from an iterator checkpoint.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["token_batch", "image_batch", "unigram_entropy"]
+
+
+def _rng(seed: int, index: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, index]))
+
+
+def token_batch(seed: int, index: int, batch: int, seq_len: int,
+                vocab: int) -> dict[str, np.ndarray]:
+    """Returns {'tokens': (B, S+1) int32} — shift for inputs/labels."""
+    rng = _rng(seed, index)
+    v = max(vocab - 2, 2)
+    # zipf-ish unigram distribution over the vocab
+    ranks = np.arange(1, v + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    toks = rng.choice(v, size=(batch, seq_len + 1), p=probs).astype(np.int32)
+    # deterministic bigram structure: after token t comes (t*7+3) % v
+    # with probability 1/2 — a learnable signal.  Applied sequentially so
+    # the relation holds against the *final* previous token.
+    mask = rng.random((batch, seq_len)) < 0.5
+    for t in range(seq_len):
+        follow = (toks[:, t] * 7 + 3) % v
+        toks[:, t + 1] = np.where(mask[:, t], follow, toks[:, t + 1])
+    return {"tokens": toks}
+
+
+def unigram_entropy(vocab: int) -> float:
+    v = max(vocab - 2, 2)
+    p = 1.0 / np.arange(1, v + 1)
+    p /= p.sum()
+    return float(-(p * np.log(p)).sum())
+
+
+def image_batch(seed: int, index: int, batch: int, size: int,
+                channels: int = 3, num_classes: int = 10) -> dict[str, np.ndarray]:
+    """Returns {'images': (B, C, H, W) f32 in ~[-1,1], 'labels': (B,) i32}.
+
+    Class y tilts the power spectrum (exponent 1 + y/num_classes) and adds a
+    class-specific low-frequency template, so labels are recoverable from
+    low frequencies — matching the JPEG energy-compaction regime.
+    """
+    rng = _rng(seed, index)
+    labels = rng.integers(0, num_classes, size=(batch,)).astype(np.int32)
+    fy = np.fft.fftfreq(size)[:, None]
+    fx = np.fft.fftfreq(size)[None, :]
+    rad = np.sqrt(fy * fy + fx * fx) + 1.0 / size
+    # class templates are a global constant (independent of the data seed):
+    # train and eval splits must share the class structure.
+    template_rng = np.random.default_rng(np.random.SeedSequence([7777]))
+    templates = template_rng.normal(size=(num_classes, channels, 4, 4)).astype(np.float32)
+    images = np.empty((batch, channels, size, size), np.float32)
+    for i in range(batch):
+        y = int(labels[i])
+        expo = 1.0 + y / max(num_classes, 1)
+        spec = rng.normal(size=(channels, size, size)) + 1j * rng.normal(size=(channels, size, size))
+        spec *= rad[None] ** (-expo)
+        img = np.real(np.fft.ifft2(spec, axes=(-2, -1)))
+        img /= (np.abs(img).max(axis=(-1, -2), keepdims=True) + 1e-8)
+        tpl = np.kron(templates[y], np.ones((size // 4, size // 4), np.float32))
+        images[i] = 0.6 * img + 0.4 * np.tanh(tpl)
+    return {"images": images, "labels": labels}

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused ASM ReLU (paper §4.2) over tiles of JPEG blocks.
+
+One grid step processes ``TILE_BLOCKS`` 8×8 blocks resident in VMEM:
+
+    approx  = tile @ R_phi      # (T, 64)·(64, 64) MXU
+    mask    = approx > 0        # VPU
+    spatial = tile @ R          # MXU
+    out     = (mask ? spatial : 0) @ Rᵀ   # VPU select + MXU
+
+Three small matmuls per tile, no HBM round-trip for the spatial
+intermediate — this is the TPU-native replacement for the paper's sparse
+harmonic-mixing einsum (DESIGN.md §3).  The 64-wide contraction is padded
+to 128 lanes by Mosaic; tiles are 8·128 rows to keep the MXU busy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import dct as dctlib
+
+__all__ = ["asm_relu_pallas", "TILE_BLOCKS"]
+
+TILE_BLOCKS = 1024
+
+
+def _asm_relu_kernel(coef_ref, recon_phi_ref, recon_ref, recon_t_ref, out_ref):
+    tile = coef_ref[...]
+    approx = jnp.dot(tile, recon_phi_ref[...],
+                     preferred_element_type=jnp.float32)
+    spatial = jnp.dot(tile, recon_ref[...],
+                      preferred_element_type=jnp.float32)
+    masked = jnp.where(approx > 0, spatial, 0.0)
+    out_ref[...] = jnp.dot(masked, recon_t_ref[...],
+                           preferred_element_type=jnp.float32
+                           ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("phi", "interpret"))
+def asm_relu_pallas(coef: jnp.ndarray, phi: int = 14, *,
+                    interpret: bool = True) -> jnp.ndarray:
+    """ASM ReLU over ``(N, 64)`` zigzag coefficients (orthonormal units).
+
+    ``interpret=True`` runs the kernel body on CPU for validation; on TPU
+    pass ``interpret=False``.
+    """
+    n = coef.shape[0]
+    tile = min(TILE_BLOCKS, n)
+    if n % tile:
+        pad = tile - n % tile
+        coef = jnp.pad(coef, ((0, pad), (0, 0)))
+    grid = (coef.shape[0] // tile,)
+    recon = jnp.asarray(dctlib.reconstruction_matrix(), coef.dtype)
+    recon_phi = jnp.asarray(dctlib.truncated_reconstruction_matrix(phi),
+                            coef.dtype)
+    out = pl.pallas_call(
+        _asm_relu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 64), lambda i: (i, 0)),
+            pl.BlockSpec((64, 64), lambda i: (0, 0)),
+            pl.BlockSpec((64, 64), lambda i: (0, 0)),
+            pl.BlockSpec((64, 64), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(coef.shape, coef.dtype),
+        interpret=interpret,
+    )(coef, recon_phi, recon, recon.T)
+    return out[:n]

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: exploded JPEG-domain convolution (paper §4.1 / Alg. 1).
+
+Applies the block-banded operator Ξ (built by ``core.conv.explode``) as
+dense MXU matmuls.  Grid: ``(image, out_block_row, cout_tile, cin_tile)``;
+one instance computes one output block-row tile:
+
+    out[n, i, :, co] += Σ_{dy, dx} in[n, s·i+dy, dx::s, ci] @ Ξ[dy, dx, ci, co]
+
+The input row is passed once per ``dy`` offset (same buffer, shifted
+index map — overlapping windows are not expressible with one BlockSpec);
+``ci`` is the accumulation grid dim (output block constant across it, so
+revisiting is legal).  Channel tiles keep the Ξ slices inside VMEM:
+(ndx, 256, 256) fp32 per dy ≈ 0.8 MB.
+
+This kernel is why the paper's "sparse einsum" complaint (§6) does not
+apply on TPU: every matmul is a dense (bw, 256)x(256, 256) MXU op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.conv import _offsets_from
+
+__all__ = ["jpeg_conv_pallas", "CH_TILE"]
+
+CH_TILE = 256
+
+
+def _make_kernel(ndy: int, ndx: int, stride: int, bw_out: int):
+    def kernel(*refs):
+        in_refs = refs[:ndy]
+        xi_refs = refs[ndy: 2 * ndy]
+        out_ref = refs[2 * ndy]
+        ci = pl.program_id(3)
+
+        @pl.when(ci == 0)
+        def _init():
+            out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+        acc = jnp.zeros(out_ref.shape[2:], jnp.float32)
+        for dy in range(ndy):
+            row = in_refs[dy][0, 0]  # (bw_pad, ci_tile)
+            xi_dy = xi_refs[dy]      # (1, ndx, ci_tile, co_tile)
+            for dx in range(ndx):
+                sl = row[dx: dx + stride * bw_out: stride]  # (bw_out, ci_tile)
+                acc = acc + jnp.dot(sl, xi_dy[0, dx],
+                                    preferred_element_type=jnp.float32)
+        out_ref[0, 0] = (out_ref[0, 0] + acc.astype(out_ref.dtype))
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def jpeg_conv_pallas(coef: jnp.ndarray, xi: jnp.ndarray, stride: int = 1, *,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Apply an exploded operator.
+
+    ``coef``: (N, bh, bw, Cin, 64); ``xi``: (ndy, ndx, Cin, 64, Cout, 64).
+    Returns (N, bh/stride, bw/stride, Cout, 64).  Matches
+    ``core.conv.apply_exploded`` exactly (tests sweep shapes).
+    """
+    n, bh, bw, cin, _ = coef.shape
+    ndy, ndx = xi.shape[0], xi.shape[1]
+    cout = xi.shape[4]
+    d_min_y, _ = _offsets_from(ndy, stride)
+    d_min_x, _ = _offsets_from(ndx, stride)
+    bh_out, bw_out = bh // stride, bw // stride
+
+    x = coef.reshape(n, bh, bw, cin * 64)
+    pad_lo_y, pad_hi_y = -d_min_y, ndy - 1 + d_min_y
+    pad_lo_x, pad_hi_x = -d_min_x, ndx - 1 + d_min_x
+    x = jnp.pad(x, ((0, 0), (pad_lo_y, pad_hi_y), (pad_lo_x, pad_hi_x),
+                    (0, 0)))
+    w = xi.reshape(ndy, ndx, cin * 64, cout * 64)
+
+    ci_full, co_full = cin * 64, cout * 64
+    tci = min(CH_TILE, ci_full)
+    tco = min(CH_TILE, co_full)
+    if ci_full % tci:
+        p = tci - ci_full % tci
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, p)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, p), (0, 0)))
+        ci_full += p
+    if co_full % tco:
+        p = tco - co_full % tco
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, p)))
+    co_pad = w.shape[-1]
+    bw_pad = x.shape[2]
+
+    grid = (n, bh_out, co_pad // tco, ci_full // tci)
+    in_specs = []
+    for dy in range(ndy):
+        in_specs.append(pl.BlockSpec(
+            (1, 1, bw_pad, tci),
+            functools.partial(
+                lambda b, i, co, ci, dy=dy: (b, stride * i + dy, 0, ci))))
+    for dy in range(ndy):
+        in_specs.append(pl.BlockSpec(
+            (1, ndx, tci, tco),
+            functools.partial(
+                lambda b, i, co, ci, dy=dy: (dy, 0, ci, co))))
+    out_spec = pl.BlockSpec((1, 1, bw_out, tco),
+                            lambda b, i, co, ci: (b, i, 0, co))
+    out = pl.pallas_call(
+        _make_kernel(ndy, ndx, stride, bw_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, bh_out, bw_out, co_pad),
+                                       coef.dtype),
+        interpret=interpret,
+    )(*([x] * ndy + [w] * ndy))
+    out = out[..., : cout * 64]
+    return out.reshape(n, bh_out, bw_out, cout, 64)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+
+__all__ = ["asm_relu_ref", "jpeg_conv_ref", "block_dct_ref", "block_idct_ref",
+           "flash_attention_ref"]
+
+
+def asm_relu_ref(coef: jnp.ndarray, phi: int) -> jnp.ndarray:
+    """ASM ReLU over (N, 64) zigzag coefficient rows (orthonormal units)."""
+    recon = jnp.asarray(dctlib.reconstruction_matrix(), coef.dtype)
+    recon_phi = jnp.asarray(dctlib.truncated_reconstruction_matrix(phi),
+                            coef.dtype)
+    mask = (coef @ recon_phi) > 0
+    spatial = coef @ recon
+    return jnp.where(mask, spatial, 0.0) @ recon.T
+
+
+def jpeg_conv_ref(coef: jnp.ndarray, xi: jnp.ndarray, stride: int = 1
+                  ) -> jnp.ndarray:
+    """Exploded-operator apply over (N, bh, bw, Cin, 64) — mirrors core.conv."""
+    from repro.core.conv import apply_exploded
+
+    return apply_exploded(coef, xi, stride)
+
+
+def block_dct_ref(blocks: jnp.ndarray) -> jnp.ndarray:
+    """(N, 8, 8) pixel blocks -> (N, 64) zigzag orthonormal coefficients."""
+    d = jnp.asarray(dctlib.dct_matrix(), blocks.dtype)
+    zz = dctlib.zigzag_permutation()
+    f = jnp.einsum("am,nmk,bk->nab", d, blocks, d)
+    return f.reshape(blocks.shape[0], 64)[:, zz]
+
+
+def block_idct_ref(coef: jnp.ndarray) -> jnp.ndarray:
+    """(N, 64) zigzag coefficients -> (N, 8, 8) pixel blocks."""
+    d = jnp.asarray(dctlib.dct_matrix(), coef.dtype)
+    inv = np.argsort(dctlib.zigzag_permutation())
+    f = coef[:, inv].reshape(coef.shape[0], 8, 8)
+    return jnp.einsum("am,nab,bk->nmk", d, f, d)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: int | None = None) -> jnp.ndarray:
+    """Dense masked attention, (B, S, H, hd) x (B, T, KVH, hd) GQA."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(s)
+    kpos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

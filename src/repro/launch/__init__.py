@@ -1,0 +1,11 @@
+"""Launchers: mesh construction, dry-run, trainer, server.
+
+Note: ``repro.launch.dryrun`` must be imported/executed FIRST in its
+process (it sets XLA_FLAGS before jax initialises); do not import it here.
+"""
+from repro.launch.mesh import (  # noqa: F401
+    make_axis_rules,
+    make_mesh_from_config,
+    make_production_mesh,
+    make_test_mesh,
+)

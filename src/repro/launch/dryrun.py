@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (jax locks the device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the *real* step function (train_step for train
+shapes, prefill/serve steps for inference shapes) against the production
+mesh with full shardings, compiles it, and records:
+
+* ``compiled.memory_analysis()``  — proves the cell fits per-device HBM;
+* ``compiled.cost_analysis()``    — XLA's aggregate (counts scan bodies once);
+* trip-count-aware FLOPs / bytes / collective bytes from
+  ``repro.launch.hlo_analysis`` — the §Roofline source of truth.
+
+Usage:
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # every cell, both meshes
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, MeshConfig, RunConfig, TrainConfig, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_axis_rules, make_production_mesh
+from repro.launch.steps import (
+    build_decode_step, build_prefill_step, build_train_step,
+)
+from repro.models.registry import build_model, cell_is_skipped, input_specs
+from repro.parallel.sharding import sharding_rules
+
+DEFAULT_OUT = "artifacts/dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             extra_tags: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    n_dev = 512 if multi else 256
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": n_dev, "family": cfg.family,
+    }
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        record["status"] = skip
+        _write(record, out_dir, extra_tags)
+        return record
+
+    mesh_cfg = MeshConfig(multi_pod=multi)
+    mesh = make_production_mesh(multi_pod=multi)
+    rules = make_axis_rules(mesh_cfg).with_mesh(mesh)
+    if os.environ.get("DRYRUN_NO_TP"):
+        # Hillclimb lever: pure-DP on the same mesh (replicated weights, no
+        # model-axis collectives) — right for sub-1B models where TP=16
+        # costs more in activation all-reduces than it saves in memory.
+        import dataclasses as _dc
+        rules = _dc.replace(rules, rules=dict(rules.rules, model=()))
+    # Microbatching keeps per-device activation memory inside v5e HBM at the
+    # 1M-token global batch (measured: 18.2GB -> 4.6GB on smollm train_4k at
+    # accum=4); the DP gradient reduction still happens once.  Wider models
+    # carry proportionally larger per-layer activations -> deeper accum;
+    # jamba-52B additionally carries (B, c, d_inner, d_state) SSM chunks.
+    if cfg.ssm_kind == "mamba" and cfg.d_model >= 4096:
+        default_accum = "16"
+    elif cfg.d_model >= 4096:
+        default_accum = "8"
+    else:
+        default_accum = "4"
+    grad_accum = int(os.environ.get("DRYRUN_GRAD_ACCUM", default_accum))
+    # Hillclimb knobs (EXPERIMENTS.md §Perf A/B runs):
+    remat = os.environ.get("DRYRUN_REMAT", "full")
+    compression = os.environ.get("DRYRUN_GRAD_COMPRESSION", "none")
+    train_cfg = TrainConfig(remat=remat, scan_layers=True,
+                            grad_accum=grad_accum,
+                            grad_compression=compression)
+    run = RunConfig(model=cfg, shape=shape, train=train_cfg, mesh=mesh_cfg)
+    model = build_model(cfg, remat=train_cfg.remat)
+
+    t0 = time.time()
+    try:
+        with mesh, sharding_rules(rules):
+            if shape.kind == "train":
+                bundle = build_train_step(model, run, mesh, rules)
+                batch = input_specs(cfg, shape, dryrun=True)
+                jitted = jax.jit(
+                    bundle.step_fn,
+                    in_shardings=bundle.in_shardings,
+                    out_shardings=bundle.out_shardings,
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(bundle.params_shape, bundle.opt_shape,
+                                       batch)
+            elif shape.kind == "prefill":
+                step, shardings, params_shape, batch = build_prefill_step(
+                    model, run, mesh, rules)
+                jitted = jax.jit(step, in_shardings=shardings)
+                lowered = jitted.lower(params_shape, batch)
+            else:  # decode
+                step, shardings, (params_shape, cache_shape, batch) = \
+                    build_decode_step(model, run, mesh, rules)
+                jitted = jax.jit(step, in_shardings=shardings,
+                                 out_shardings=(None, shardings[1]),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_shape, cache_shape, batch)
+            record["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        print(mem)  # proves it fits
+        ca = compiled.cost_analysis() or {}
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+        record["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+        record["xla_cost"] = {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+        }
+        hlo = compiled.as_text()
+        cost = hlo_analysis.analyze_hlo(hlo, n_dev)
+        record["hlo_cost"] = cost.to_json()
+        record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = round(time.time() - t0, 2)
+    _write(record, out_dir, extra_tags)
+    return record
+
+
+def _write(record: dict, out_dir: str, extra_tags: str = "") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{extra_tags}" if extra_tags else ""
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1)
+    status = record["status"]
+    print(f"[dryrun] {record['arch']} × {record['shape']} × {record['mesh']}"
+          f" -> {status} ({record.get('total_s', 0)}s)", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import list_archs
+
+    if args.all:
+        cells = [(a, s, m) for a in list_archs() for s in SHAPES
+                 for m in ("single", "multi")]
+    else:
+        cells = [(args.arch, args.shape, args.mesh)]
+    for arch, shape, mesh_kind in cells:
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh_kind}.json")
+        if args.skip_existing and os.path.exists(path):
+            continue
+        run_cell(arch, shape, mesh_kind, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Production mesh construction.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets ``XLA_FLAGS`` before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+from repro.parallel.sharding import AxisRules
+
+__all__ = ["make_production_mesh", "make_mesh_from_config", "make_axis_rules",
+           "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: 16×16 per pod, 2 pods multi-pod.
+
+    ``pod`` is a second data-parallel level whose collectives cross the
+    inter-pod DCI; ``data``/``model`` live on intra-pod ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    if cfg.multi_pod:
+        shape, axes = (cfg.pods, cfg.data, cfg.model), ("pod", "data", "model")
+    else:
+        shape, axes = (cfg.data, cfg.model), ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_axis_rules(cfg: MeshConfig) -> AxisRules:
+    return AxisRules.default(
+        cfg.multi_pod, pods=cfg.pods, data=cfg.data, model=cfg.model
+    )
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Small mesh for CPU sharding tests (requires forced host devices)."""
+    if pods:
+        return jax.make_mesh(
+            (pods, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

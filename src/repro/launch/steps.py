@@ -1,0 +1,195 @@
+"""Step builders + sharding trees: where models meet the mesh.
+
+``build_train_step`` / ``build_prefill_step`` / ``build_decode_step`` return
+(step_fn, in_shardings, out_shardings-ish, example args builder) bundles the
+launcher and the dry-run share, so a compile success in the dry-run is a
+compile success in the trainer.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models.registry import Model, input_specs
+from repro.optim import (
+    accumulate_microbatches, clip_by_global_norm, compress_grads,
+    make_optimizer, make_schedule,
+)
+from repro.parallel.sharding import (
+    AxisRules, batch_pspec, cache_pspec, param_pspec, zero1_pspec,
+)
+
+__all__ = [
+    "path_str", "params_shardings", "opt_shardings", "batch_shardings",
+    "cache_shardings", "build_train_step", "build_prefill_step",
+    "build_decode_step", "TrainStepBundle",
+]
+
+
+def path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _tree_shardings(mesh, tree, spec_fn: Callable[[str, tuple], P]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        shape = tuple(getattr(leaf, "shape", ()))
+        out.append(NamedSharding(mesh, spec_fn(path_str(path), shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def params_shardings(mesh, params_tree, cfg: ModelConfig):
+    return _tree_shardings(
+        mesh, params_tree, lambda p, s: param_pspec(p, s, cfg))
+
+
+def opt_shardings(mesh, opt_tree, cfg: ModelConfig, rules: AxisRules,
+                  zero1: bool = True):
+    def spec(path, shape):
+        if not shape:
+            return P()
+        ps = param_pspec(path, shape, cfg)
+        return zero1_pspec(ps, shape, rules) if zero1 else ps
+    return _tree_shardings(mesh, opt_tree, spec)
+
+
+def batch_shardings(mesh, batch_tree, rules: AxisRules, global_batch: int):
+    baxes = batch_pspec(rules, global_batch)
+    bspec = baxes if baxes else None
+
+    def spec(path, shape):
+        if not shape:
+            return P()
+        return P(bspec, *([None] * (len(shape) - 1)))
+    return _tree_shardings(mesh, batch_tree, spec)
+
+
+def cache_shardings(mesh, cache_tree, cfg: ModelConfig, rules: AxisRules,
+                    global_batch: int):
+    """Decode-cache shardings: batch over (pod, data) when divisible, cache
+    sequence over the leftover axes (sequence-parallel KV — the flash-decode
+    layout; XLA inserts the partial-softmax combines)."""
+    baxes, seq_axes = cache_pspec(rules, global_batch)
+    bspec = baxes if baxes else None
+    sspec = tuple(a for a in seq_axes if a not in (baxes or ()))
+    sspec = sspec if sspec else None
+    model_ax = "model"
+
+    def spec(path, shape):
+        if not shape:
+            return P()
+        p = path.lower()
+        if "cross" in p and shape and len(shape) == 5:
+            return P(None, bspec, None, None, None)
+        if p.endswith("/k") or p.endswith("/v"):
+            # (n_periods, B, T, KVH, hd)
+            return P(None, bspec, sspec, None, None)
+        if "wkv" in p:  # (n_periods, B, H, hs, hs)
+            ok = len(shape) == 5 and shape[2] % max(rules.size("model"), 1) == 0
+            return P(None, bspec, model_ax if ok else None, None, None)
+        if "ssm" in p:  # (n_periods, B, di, ds)
+            return P(None, bspec, model_ax, None)
+        if "conv" in p:  # (n_periods, B, dc-1, di)
+            return P(None, bspec, None, model_ax)
+        if "shift" in p:  # (n_periods, B, 1, D)
+            return P(None, bspec, None, None)
+        return P()  # index and other scalars
+
+    return _tree_shardings(mesh, cache_tree, spec)
+
+
+class TrainStepBundle(NamedTuple):
+    step_fn: Callable
+    params_shape: Any
+    opt_shape: Any
+    in_shardings: tuple
+    out_shardings: tuple
+    init_fns: tuple  # (init_params(key), opt_init(params))
+
+
+def build_train_step(model: Model, run: RunConfig, mesh, rules: AxisRules
+                     ) -> TrainStepBundle:
+    """Fused loss+grad+update step with DP/TP/EP shardings and ZeRO-1."""
+    cfg, tc = model.cfg, run.train
+    optimizer = make_optimizer(
+        tc.optimizer, b1=tc.beta1, b2=tc.beta2, eps=tc.eps,
+        weight_decay=tc.weight_decay)
+    schedule = make_schedule(tc.schedule, tc.learning_rate, tc.warmup_steps,
+                             tc.total_steps)
+
+    def pure_loss(params, batch):
+        return model.loss_fn(params, batch)[0]
+
+    def grad_constraint(tree):
+        """ZeRO-2: shard the fp32 grad accumulator over the data axis."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in flat:
+            ps = param_pspec(path_str(path), leaf.shape, cfg)
+            ps = zero1_pspec(ps, leaf.shape, rules)
+            out.append(jax.lax.with_sharding_constraint(leaf, ps))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = accumulate_microbatches(
+            pure_loss, params, batch, tc.grad_accum,
+            grad_constraint=grad_constraint if tc.zero1 else None)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        grads = compress_grads(grads, tc.grad_compression)
+        lr = schedule(opt_state.step)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_opt, metrics
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    p_sh = params_shardings(mesh, params_shape, cfg)
+    o_sh = opt_shardings(mesh, opt_shape, cfg, rules, tc.zero1)
+    batch_tree = input_specs(cfg, run.shape, dryrun=True)
+    b_sh = batch_shardings(mesh, batch_tree, rules, run.shape.global_batch)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P()),
+                  "lr": NamedSharding(mesh, P())}
+    return TrainStepBundle(
+        step_fn=train_step,
+        params_shape=params_shape,
+        opt_shape=opt_shape,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, metrics_sh),
+        init_fns=(model.init_params, optimizer.init),
+    )
+
+
+def build_prefill_step(model: Model, run: RunConfig, mesh, rules: AxisRules):
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    p_sh = params_shardings(mesh, params_shape, cfg)
+    batch_tree = input_specs(cfg, run.shape, dryrun=True)
+    b_sh = batch_shardings(mesh, batch_tree, rules, run.shape.global_batch)
+    return prefill_step, (p_sh, b_sh), params_shape, batch_tree
+
+
+def build_decode_step(model: Model, run: RunConfig, mesh, rules: AxisRules):
+    cfg = model.cfg
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    p_sh = params_shardings(mesh, params_shape, cfg)
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(run.shape.global_batch, run.shape.seq_len))
+    c_sh = cache_shardings(mesh, cache_shape, cfg, rules,
+                           run.shape.global_batch)
+    batch_tree = input_specs(cfg, run.shape, dryrun=True)
+    b_sh = batch_shardings(mesh, batch_tree, rules, run.shape.global_batch)
+    return decode_step, (p_sh, c_sh, b_sh), (params_shape, cache_shape, batch_tree)

@@ -1,0 +1,191 @@
+"""Fault-tolerant training driver.
+
+Features exercised end-to-end on CPU (reduced configs) and designed for the
+production mesh (full configs through the same code path as the dry-run):
+
+* auto-resume from the newest valid checkpoint (corrupted ones skipped);
+* SIGTERM/SIGINT preemption hook: save synchronously, exit 0 (the cluster
+  scheduler restarts the job, which resumes — classic preemption handling);
+* async checkpoint writes every ``--ckpt-every`` steps, keep-last-k;
+* data-iterator state inside the checkpoint (exactly-once batches);
+* straggler watchdog: per-step wall-clock EWMA; steps slower than
+  ``--straggler-factor``× the EWMA are logged with their step index (on a
+  real cluster this feeds the controller that re-shards around the slow
+  host; here it is recorded in the metrics file);
+* works for LM archs and the paper's jpeg-resnet (``--arch jpeg-resnet``).
+
+Example (CPU):
+    PYTHONPATH=src python -m repro.launch.train --arch jpeg-resnet \
+        --reduced --steps 300 --batch 32 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import (
+    MeshConfig, RunConfig, ShapeConfig, TrainConfig, get_config,
+    reduced_config,
+)
+from repro.data import jpeg_iterator, token_iterator
+from repro.models.registry import build_model, count_params
+from repro.optim import make_optimizer, make_schedule
+from repro.optim.grad import clip_by_global_norm
+
+__all__ = ["main", "train_loop"]
+
+
+def build_iterator(cfg, batch: int, seq: int, seed: int):
+    if cfg.family == "jpeg_resnet":
+        return jpeg_iterator(seed, batch, cfg.image_size, cfg.in_channels,
+                             cfg.num_classes)
+    return token_iterator(seed, batch, seq, cfg.vocab_size)
+
+
+def to_model_batch(cfg, host_batch, d_model=None):
+    batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+    if cfg.family == "vlm":
+        b = batch["tokens"].shape[0]
+        batch["vision_embeds"] = jnp.zeros(
+            (b, cfg.vision_prefix_len, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        b = batch["tokens"].shape[0]
+        batch["frames"] = jnp.zeros(
+            (b, cfg.encoder_context_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+def train_loop(args) -> dict:
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 20, 1),
+                     optimizer=args.optimizer, grad_clip=1.0)
+    model = build_model(cfg)
+    optimizer = make_optimizer(tc.optimizer, weight_decay=tc.weight_decay)
+    schedule = make_schedule(tc.schedule, tc.learning_rate, tc.warmup_steps,
+                             tc.total_steps)
+
+    it = build_iterator(cfg, args.batch, args.seq, seed=args.seed)
+    manager = CheckpointManager(args.ckpt_dir, keep=args.keep)
+
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    opt_state = optimizer.init(params)
+    start_step = 0
+    restored = manager.restore_latest({"params": params, "opt": opt_state})
+    if restored is not None and args.resume:
+        step0, tree, extra = restored
+        params, opt_state = tree["params"], tree["opt"]
+        it.load_state_dict(extra["data_state"])
+        start_step = step0
+        print(f"[train] resumed from step {step0}", flush=True)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def pure_loss(p, b):
+            return model.loss_fn(p, b)[0]
+        loss, grads = jax.value_and_grad(pure_loss)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedule(opt_state.step)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        return params, opt_state, loss, gnorm
+
+    # --- preemption hook --------------------------------------------------
+    state = {"params": params, "opt": opt_state, "step": start_step}
+    interrupted = {"flag": False}
+
+    def _preempt(signum, frame):
+        print(f"[train] signal {signum}: checkpoint-and-exit", flush=True)
+        interrupted["flag"] = True
+
+    old_handlers = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        old_handlers[sig] = signal.signal(sig, _preempt)
+
+    # --- loop ---------------------------------------------------------
+    losses, straggler_log = [], []
+    ewma = None
+    n_params = count_params(params)
+    print(f"[train] {cfg.name}: {n_params:,} params", flush=True)
+    t_loop = time.time()
+    step = start_step
+    try:
+        for step in range(start_step, args.steps):
+            t0 = time.time()
+            batch = to_model_batch(cfg, next(it))
+            params, opt_state, loss, gnorm = step_fn(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                lv = float(loss)
+                losses.append((step, lv))
+                print(f"[train] step {step} loss {lv:.4f} "
+                      f"gnorm {float(gnorm):.3f}", flush=True)
+            dt = time.time() - t0
+            if ewma is None:
+                ewma = dt
+            else:
+                if dt > args.straggler_factor * ewma:
+                    straggler_log.append({"step": step, "dt": dt,
+                                          "ewma": ewma})
+                    print(f"[train] straggler: step {step} took {dt:.2f}s "
+                          f"(ewma {ewma:.2f}s)", flush=True)
+                ewma = 0.9 * ewma + 0.1 * dt
+            if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                manager.save(step + 1, {"params": params, "opt": opt_state},
+                             extra={"data_state": it.state_dict()},
+                             blocking=False)
+            if interrupted["flag"]:
+                break
+    finally:
+        for sig, h in old_handlers.items():
+            signal.signal(sig, h)
+    manager.wait()
+    final_step = step + 1 if not interrupted["flag"] else step
+    manager.save(final_step, {"params": params, "opt": opt_state},
+                 extra={"data_state": it.state_dict()})
+    wall = time.time() - t_loop
+    result = {
+        "arch": cfg.name, "steps_run": final_step - start_step,
+        "final_step": final_step, "losses": losses,
+        "stragglers": straggler_log, "wall_s": wall,
+        "interrupted": interrupted["flag"], "params": n_params,
+    }
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(result, f, indent=1)
+    if interrupted["flag"]:
+        sys.exit(0)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--resume", action="store_true", default=True)
+    ap.add_argument("--no-resume", dest="resume", action="store_false")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args()
+    train_loop(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: shared layers + family modules + registry."""
+from repro.models.registry import (  # noqa: F401
+    Model,
+    build_model,
+    cell_is_skipped,
+    count_params,
+    input_specs,
+)

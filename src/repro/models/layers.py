@@ -1,0 +1,225 @@
+"""Shared transformer layers: norms, RoPE, GQA/SWA attention, gated MLPs.
+
+Conventions
+-----------
+* Activations ``(B, S, D)``; attention heads materialised as
+  ``(B, S, H, head_dim)``; KV caches ``(B, T, KVH, head_dim)``.
+* GQA: ``H = KVH * G`` query heads grouped per KV head.
+* Softmax/norm statistics in fp32 regardless of activation dtype.
+* Long sequences (> ``CHUNK_THRESHOLD``) use an online-softmax KV-chunk
+  scan (pure-JAX flash attention) to bound the score working set; the
+  Pallas kernel in ``repro.kernels.flash_attention`` is the TPU-target
+  twin of this routine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "resolve_dtype", "rms_norm", "layer_norm", "apply_rope", "sinusoidal_positions",
+    "attention", "decode_attention", "swiglu_mlp", "gelu_mlp",
+    "DENSE_ATTN_ELEMS", "KV_CHUNK",
+]
+
+DENSE_ATTN_ELEMS = 2048 * 2048  # dense path for S·T up to this
+KV_CHUNK = 1024
+MAX_Q_CHUNKS = 32  # bound on python-unrolled query chunks (HLO size)
+
+
+def resolve_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """(S,) -> (S, dim) sinusoidal embeddings (whisper-style)."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embeddings.  ``x``: (B, S, H, hd); ``positions``: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q (B,S,KVH,G,hd) x k (B,T,KVH,hd) -> (B,KVH,G,S,T) fp32 scores."""
+    return jnp.einsum("bsngd,btnd->bngst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Full-sequence attention with bounded working set and exact FLOPs.
+
+    ``q``: (B, S, H, hd); ``k``/``v``: (B, T, KVH, hd).  ``q_offset`` is the
+    absolute position of q[0] relative to k[0] (prefill: 0).
+
+    Small problems take the dense masked path.  Large ones are processed as
+    python-unrolled *query chunks*, each running an online-softmax scan over
+    only the KV chunks its causal/window footprint actually touches — the
+    flash-attention schedule in pure JAX (the Pallas kernel in
+    ``repro.kernels.flash_attention`` is the TPU-native twin).  Working set
+    per chunk pair is (B, H, q_chunk, kv_chunk) instead of (B, H, S, T), and
+    fully-masked chunk pairs are skipped (no fake FLOPs in the roofline).
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd) * (hd ** -0.5)
+    if s * t <= DENSE_ATTN_ELEMS:
+        scores = _gqa_scores(qg, k)  # (B, KVH, G, S, T)
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(t)
+        mask = jnp.ones((s, t), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+        return out.reshape(b, s, h, hd)
+
+    qc = max(KV_CHUNK, s // MAX_Q_CHUNKS)
+    n_q = -(-s // qc)
+    outs = []
+    for i in range(n_q):
+        q_i = qg[:, i * qc: (i + 1) * qc]
+        sc = q_i.shape[1]
+        lo_pos = i * qc + q_offset
+        hi_pos = lo_pos + sc - 1
+        lo = 0
+        if window is not None:
+            lo = max(0, (lo_pos - window + 1) // KV_CHUNK)
+        hi = -(-min(hi_pos + 1, t) // KV_CHUNK) if causal else -(-t // KV_CHUNK)
+        hi = max(min(hi, -(-t // KV_CHUNK)), lo + 1)
+        k_i = k[:, lo * KV_CHUNK: hi * KV_CHUNK]
+        v_i = v[:, lo * KV_CHUNK: hi * KV_CHUNK]
+        o = _attention_kv_chunked(
+            q_i, k_i, v_i, causal=causal, window=window,
+            q_offset=lo_pos - lo * KV_CHUNK)
+        outs.append(o.reshape(b, sc, h, hd))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _attention_kv_chunked(qg, k, v, *, causal, window, q_offset,
+                          chunk: int = KV_CHUNK):
+    """Online-softmax scan over KV chunks (flash-attention recurrence)."""
+    b, s, kvh, g, hd = qg.shape
+    t = k.shape[1]
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(s) + q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kci, vci = xs
+        scores = _gqa_scores(qg, kci)  # (B, KVH, G, S, chunk)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] < t  # padding
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bngst,btnd->bngsd", p.astype(qg.dtype), vci)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, s, hd), qg.dtype)
+    # Checkpoint the chunk body: the scan's backward then recomputes scores
+    # per tile instead of storing S×T probabilities — flash-attention
+    # backward semantics (without this, backward memory is quadratic).
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, S, KVH, G, hd)
+
+
+def decode_attention(
+    q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray, *, window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token attention against a padded cache.
+
+    ``q``: (B, 1, H, hd); caches (B, T, KVH, hd); ``cache_len`` scalar/int32 —
+    number of valid entries (the new token's k/v already written).  With a
+    ring-buffer SWA cache every slot is valid; pass ``window=None`` and a
+    full ``cache_len``.
+    """
+    b, _, h, hd = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd) * (hd ** -0.5)
+    scores = _gqa_scores(qg, k_cache)  # (B, KVH, G, 1, T)
+    valid = jnp.arange(t) < cache_len
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def swiglu_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_in: jnp.ndarray,
+               w_out: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU: (silu(x @ w_gate) * (x @ w_in)) @ w_out."""
+    gate = jax.nn.silu(x @ w_gate)
+    h = gate * (x @ w_in)
+    h = shard(h, "batch", None, "model")
+    return h @ w_out
+
+
+def gelu_mlp(x: jnp.ndarray, w_in: jnp.ndarray, b_in: jnp.ndarray,
+             w_out: jnp.ndarray, b_out: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(x @ w_in + b_in)
+    h = shard(h, "batch", None, "model")
+    return h @ w_out + b_out

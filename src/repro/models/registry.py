@@ -1,0 +1,185 @@
+"""Architecture registry: one interface over every family.
+
+``build_model(cfg)`` returns a :class:`Model` bundle of pure functions; the
+launcher/dry-run only ever talks to this interface.
+
+``input_specs(cfg, shape, for_dryrun)`` produces either concrete host
+batches (smoke tests / training) or ``jax.ShapeDtypeStruct`` stand-ins (the
+dry-run — weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["Model", "build_model", "input_specs", "decode_lengths",
+           "cell_is_skipped", "count_params"]
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Any]
+    loss_fn: Callable[..., Any]            # (params, batch) -> (loss, metrics)
+    forward: Callable[..., Any]            # (params, batch) -> outputs
+    init_cache: Callable[[int, int], Any] | None   # (batch, seq) -> cache
+    decode_step: Callable[..., Any] | None  # (params, cache, batch)
+    prefill: Callable[..., Any] | None = None  # (params, batch) -> (logits, cache)
+
+
+# --------------------------------------------------------------------------
+# LM families
+# --------------------------------------------------------------------------
+
+
+def _lm_model(cfg: ModelConfig, remat: str = "none") -> Model:
+    def init_params(key):
+        return T.init_params(key, cfg)
+
+    def loss(params, batch):
+        return T.loss_fn(params, cfg, batch, remat=remat)
+
+    def fwd(params, batch):
+        return T.forward(params, cfg, batch, training=False)
+
+    def init_cache(batch, seq):
+        return T.init_cache(cfg, batch, seq)
+
+    def dstep(params, cache, batch):
+        return T.decode_step(params, cfg, cache, batch)
+
+    def pfill(params, batch, pad_to=None):
+        return T.prefill(params, cfg, batch, pad_to=pad_to)
+
+    return Model(cfg, init_params, loss, fwd, init_cache, dstep, pfill)
+
+
+# --------------------------------------------------------------------------
+# JPEG-ResNet family (the paper's own architecture)
+# --------------------------------------------------------------------------
+
+
+def _jpeg_resnet_model(cfg: ModelConfig, remat: str = "none") -> Model:
+    from repro.core import resnet as R
+
+    spec = R.ResNetSpec(
+        in_channels=cfg.in_channels, widths=tuple(cfg.widths),
+        blocks_per_stage=cfg.blocks_per_stage, num_classes=cfg.num_classes,
+        phi=cfg.asm_phi,
+    )
+    use_remat = remat != "none"
+
+    def init_params(key):
+        params, state = R.init_resnet(key, spec, L.resolve_dtype(cfg.dtype))
+        return {"params": params, "bn_state": state}
+
+    def loss(bundle, batch):
+        logits, new_state = R.jpeg_apply(
+            bundle["params"], bundle["bn_state"], batch["coefficients"],
+            training=True, spec=spec, remat=use_remat)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+        loss = nll.mean()
+        return loss, {"loss": loss, "bn_state": new_state}
+
+    def fwd(bundle, batch):
+        logits, _ = R.jpeg_apply(
+            bundle["params"], bundle["bn_state"], batch["coefficients"],
+            training=False, spec=spec)
+        return logits, 0.0
+
+    return Model(cfg, init_params, loss, fwd, None, None)
+
+
+def build_model(cfg: ModelConfig, remat: str = "none") -> Model:
+    if cfg.family == "jpeg_resnet":
+        return _jpeg_resnet_model(cfg, remat)
+    return _lm_model(cfg, remat)
+
+
+# --------------------------------------------------------------------------
+# Input specs per (family, shape kind)
+# --------------------------------------------------------------------------
+
+
+def decode_lengths(cfg: ModelConfig, shape: ShapeConfig) -> tuple[int, int]:
+    """(encoder_len, decoder_len) convention for enc-dec shapes."""
+    return shape.seq_len, max(shape.seq_len // 8, 8)
+
+
+def cell_is_skipped(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    """Returns a skip reason or None (DESIGN.md §Arch-applicability)."""
+    if cfg.family == "jpeg_resnet" and shape.kind != "train":
+        return "skip(no-decode: classification net)"
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        return "skip(full-attn)"
+    return None
+
+
+def _tok(batch, seq, dryrun):
+    if dryrun:
+        return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return np.zeros((batch, seq), np.int32)
+
+
+def _f(shape, dtype, dryrun):
+    if dryrun:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return np.zeros(shape, np.float32).astype(dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                dryrun: bool = True) -> dict[str, Any]:
+    """Model inputs for one (arch × shape) cell.
+
+    train/prefill: full-sequence batch; decode: one-token batch (the KV
+    cache is created separately via ``Model.init_cache``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dtype = L.resolve_dtype(cfg.dtype)
+    if cfg.family == "jpeg_resnet":
+        n_blocks = cfg.image_size // 8
+        labels = (jax.ShapeDtypeStruct((b,), jnp.int32) if dryrun
+                  else np.zeros((b,), np.int32))
+        return {
+            "coefficients": _f((b, n_blocks, n_blocks, cfg.in_channels, 64),
+                               jnp.float32, dryrun),
+            "labels": labels,
+        }
+    if shape.kind == "decode":
+        batch = {"tokens": _tok(b, 1, dryrun)}
+        return batch
+    # train / prefill
+    if cfg.family == "audio":
+        enc_len, dec_len = decode_lengths(cfg, shape)
+        batch = {
+            "frames": _f((b, enc_len, cfg.d_model), dtype, dryrun),
+            "tokens": _tok(b, dec_len, dryrun),
+        }
+        if shape.kind == "train":
+            batch["labels"] = _tok(b, dec_len, dryrun)
+        return batch
+    if cfg.family == "vlm":
+        text_len = s - cfg.vision_prefix_len
+        batch = {
+            "tokens": _tok(b, text_len, dryrun),
+            "vision_embeds": _f((b, cfg.vision_prefix_len, cfg.d_model),
+                                dtype, dryrun),
+        }
+        if shape.kind == "train":
+            batch["labels"] = _tok(b, text_len, dryrun)
+        return batch
+    batch = {"tokens": _tok(b, s, dryrun)}
+    if shape.kind == "train":
+        batch["labels"] = _tok(b, s, dryrun)
+    return batch
+
+
+def count_params(params: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

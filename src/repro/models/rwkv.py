@@ -1,0 +1,205 @@
+"""RWKV-6 "Finch" blocks [arXiv:2404.05892] — data-dependent decay.
+
+Time-mix: data-dependent token-shift (DDLerp with a shared low-rank
+projection), per-channel decay ``w = exp(-exp(w0 + lora(x)))``, and the
+per-head WKV matrix recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    y_t = r_t (diag(u) k_tᵀ v_t + S_{t-1})
+
+evaluated with a chunked scan (outer ``lax.scan`` over chunks carrying S,
+inner within-chunk computation in matmul form) so prefill work is
+MXU-shaped.  Channel-mix: squared-ReLU MLP with token shift.
+
+Decode is the single-token recurrence over (shift states, S).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import shard
+
+__all__ = ["init_rwkv_layer", "rwkv_time_mix", "rwkv_channel_mix",
+           "init_rwkv_cache", "rwkv_time_mix_decode", "rwkv_channel_mix_decode"]
+
+LORA_R = 32
+CHUNK = 32
+# Per-step log-decay clamp: the chunked factorisation exp(cum_t - cum_j)
+# is evaluated as exp(cum_t)·exp(-cum_j); bounding |log w| <= MAX_NEG_LOGW
+# keeps the per-chunk exponent range inside fp32 (32 · 2 = 64 < 88).  A
+# decay faster than e^-2 per step zeroes the state within ~3 tokens anyway
+# (the official RWKV CUDA kernel applies similar numerical guards).
+MAX_NEG_LOGW = 2.0
+
+
+def init_rwkv_layer(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    ks = jax.random.split(key, 14)
+    s = d ** -0.5
+    return {
+        "tm": {
+            "mu_base": jax.random.uniform(ks[0], (d,), dtype),
+            "mu": jax.random.uniform(ks[1], (5, d), dtype),
+            "ddlerp_w1": jax.random.normal(ks[2], (d, 5 * LORA_R), dtype) * s,
+            "ddlerp_w2": jax.random.normal(ks[3], (5, LORA_R, d), dtype) * LORA_R ** -0.5,
+            "receptance": jax.random.normal(ks[4], (d, d), dtype) * s,
+            "key": jax.random.normal(ks[5], (d, d), dtype) * s,
+            "value": jax.random.normal(ks[6], (d, d), dtype) * s,
+            "gate": jax.random.normal(ks[7], (d, d), dtype) * s,
+            "output": jax.random.normal(ks[8], (d, d), dtype) * s,
+            "decay_base": jnp.full((d,), -6.0, jnp.float32),
+            "decay_w1": jax.random.normal(ks[9], (d, 64), dtype) * s,
+            "decay_w2": jax.random.normal(ks[10], (64, d), dtype) * 64 ** -0.5,
+            "bonus": jax.random.normal(ks[11], (nh, hs), jnp.float32) * 0.1,
+            "ln_w": jnp.ones((d,), jnp.float32),  # per-head group norm
+            "ln_b": jnp.zeros((d,), jnp.float32),
+        },
+        "cm": {
+            "mu_k": jax.random.uniform(ks[12], (d,), dtype),
+            "mu_r": jax.random.uniform(ks[13], (d,), dtype),
+            "key": jax.random.normal(ks[4], (d, cfg.d_ff), dtype) * s,
+            "value": jax.random.normal(ks[5], (cfg.d_ff, d), dtype) * cfg.d_ff ** -0.5,
+            "receptance": jax.random.normal(ks[6], (d, d), dtype) * s,
+        },
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray | None) -> jnp.ndarray:
+    """Shift right by one along seq; ``prev`` (B, 1, D) seeds position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xx, p):
+    """Finch data-dependent lerp -> the five mixed inputs (w,k,v,r,g)."""
+    dx = xx - x
+    base = x + dx * p["mu_base"]
+    lora = jnp.tanh(base @ p["ddlerp_w1"])
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, 5, LORA_R)
+    dyn = jnp.einsum("bsfr,frd->fbsd", lora, p["ddlerp_w2"])
+    mixed = x[None] + dx[None] * (p["mu"][:, None, None, :] + dyn)
+    return mixed  # (5, B, S, D): w, k, v, r, g
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int = CHUNK):
+    """WKV recurrence over (B, S, H, hs) tensors; returns (y, S_last).
+
+    Within a chunk, cumulative decay products turn the recurrence into
+    matmuls:  y_t = r_t S_in D_{<t} + intra-chunk attention-like term.
+    For clarity and correctness we evaluate the intra-chunk part with a
+    (chunk × chunk) decay-weighted score matrix — O(S·chunk) like SWA.
+    """
+    b, s, h, hs = r.shape
+    n = max(s // chunk, 1)
+    c = s // n
+    rs = r.reshape(b, n, c, h, hs).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(b, n, c, h, hs).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n, c, h, hs).transpose(1, 0, 2, 3, 4)
+    ws = w.reshape(b, n, c, h, hs).transpose(1, 0, 2, 3, 4)
+
+    def body(s_in, xs):
+        rc, kc, vc, wc = xs  # (B, c, H, hs)
+        logw = jnp.log(wc)  # decays in (e^-MAX_NEG_LOGW, 1), clamped at source
+        cum = jnp.cumsum(logw, axis=1)  # log prod of w_1..w_t
+        # carry-in term: y_t += r_t @ (D_t S_in) with D_t = prod_{i<=t-1} w_i
+        dec_in = jnp.exp(cum - logw)  # prod w_1..w_{t-1}
+        y_in = jnp.einsum("bthk,bhkv->bthv", rc * dec_in, s_in)
+        # intra-chunk: y_t += sum_{j<t} (r_t·k_j · prod_{j<i<t} w) v_j.
+        # score[t, j] = sum_k r_t[k] k_j[k] exp(cum[t-1,k] - cum[j,k]), j < t.
+        att = jnp.einsum("bthk,bjhk->bhtj", rc * dec_in, kc * jnp.exp(-cum))
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhtj,bjhv->bthv", att, vc)
+        # diagonal "bonus": y_t += (r_t · (u ⊙ k_t)) v_t
+        diag_coef = jnp.einsum("bthk,bthk->bth", rc, kc * u[None, None])
+        y = y_in + y_intra + diag_coef[..., None] * vc
+        # state update: S_out = D_c S_in + sum_j (prod_{j<i<=c} w) k_j v_j
+        dec_full = jnp.exp(cum[:, -1][:, None] - cum)  # prod_{j<i<=c}
+        s_out = jnp.exp(cum[:, -1])[..., None] * s_in + jnp.einsum(
+            "bjhk,bjhv->bhkv", kc * dec_full, vc
+        )
+        return s_out, y
+
+    # Checkpoint the chunk body: backward recomputes the intra-chunk decay
+    # matrices instead of storing them per chunk (linear-attention flash
+    # semantics; without this, train memory is O(S·c) per layer).
+    s_last, ys = jax.lax.scan(jax.checkpoint(body), s0, (rs, ks_, vs, ws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hs)
+    return y, s_last
+
+
+def _group_norm_heads(x: jnp.ndarray, w, bias, nh: int, eps: float = 64e-5):
+    b, s, d = x.shape
+    xh = x.reshape(b, s, nh, d // nh).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return xh.reshape(b, s, d) * w + bias
+
+
+def rwkv_time_mix(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                  cache: dict | None = None):
+    """(B, S, D) -> (B, S, D); cache carries (shift, wkv state)."""
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    prev = None if cache is None else cache["shift_tm"]
+    xx = _token_shift(x, prev)
+    xw, xk, xv, xr, xg = _ddlerp(x, xx, p)
+    r = (xr @ p["receptance"]).reshape(b, s, nh, hs)
+    k = (xk @ p["key"]).reshape(b, s, nh, hs)
+    v = (xv @ p["value"]).reshape(b, s, nh, hs)
+    g = jax.nn.silu(xg @ p["gate"])
+    decay = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(b, s, nh, hs)
+    w = jnp.maximum(w, float(np.exp(-MAX_NEG_LOGW)))  # numerical guard
+    s0 = (jnp.zeros((b, nh, hs, hs), jnp.float32) if cache is None
+          else cache["wkv"])
+    y, s_last = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), w, p["bonus"], s0)
+    y = _group_norm_heads(y.reshape(b, s, d), p["ln_w"], p["ln_b"], nh)
+    out = (y.astype(x.dtype) * g) @ p["output"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_tm": x[:, -1:], "wkv": s_last}
+    return out, new_cache
+
+
+def rwkv_channel_mix(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                     cache: dict | None = None):
+    prev = None if cache is None else cache["shift_cm"]
+    xx = _token_shift(x, prev)
+    xk = x + (xx - x) * p["mu_k"]
+    xr = x + (xx - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["key"]))
+    k = shard(k, "batch", None, "model")
+    kv = k @ p["value"]
+    out = jax.nn.sigmoid(xr @ p["receptance"]) * kv
+    new_cache = {"shift_cm": x[:, -1:]} if cache is not None else None
+    return out, new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    return {
+        "shift_tm": jnp.zeros((batch, 1, d), dtype),
+        "shift_cm": jnp.zeros((batch, 1, d), dtype),
+        "wkv": jnp.zeros((batch, nh, hs, hs), jnp.float32),
+    }
+
+
+def rwkv_time_mix_decode(x, p, cfg, cache):
+    return rwkv_time_mix(x, p, cfg, cache)
+
+
+def rwkv_channel_mix_decode(x, p, cfg, cache):
+    return rwkv_channel_mix(x, p, cfg, cache)

@@ -1,0 +1,604 @@
+"""Unified LM stack covering dense / MoE / hybrid / SSM / VLM / enc-dec.
+
+Layer heterogeneity (Jamba's 1:7 attn:mamba with MoE every other layer) is
+handled by a *repeating period*: layers are grouped into
+``n_layers // period`` pattern repetitions; parameters are stacked over
+repetitions and the repetitions are driven by ``lax.scan`` (HLO size O(1)
+in depth — a compile-time requirement at 512 devices), while the ``period``
+positions inside the body are unrolled Python (their parameter *structures*
+differ).
+
+Caches: every mixer kind exposes ``init`` + single-token ``step``; decode
+scans over (stacked params, stacked caches) so the serve step is also
+O(1)-sized HLO.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "layer_kinds", "pattern_period", "init_params", "forward", "loss_fn",
+    "init_cache", "decode_step",
+]
+
+
+# --------------------------------------------------------------------------
+# Layer pattern
+# --------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """Per-layer (mixer, ffn) kinds for the decoder stack."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.ssm_kind == "rwkv6":
+            mixer = "rwkv"
+        elif cfg.ssm_kind == "mamba":
+            mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+        else:
+            mixer = "attn"
+        if mixer == "rwkv":
+            ffn = "rwkv_cm"  # channel-mix plays the FFN role
+        elif cfg.is_moe_layer(i):
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+def pattern_period(cfg: ModelConfig) -> int:
+    kinds = layer_kinds(cfg)
+    for p in range(1, len(kinds) + 1):
+        if len(kinds) % p == 0 and all(
+            kinds[i] == kinds[i % p] for i in range(len(kinds))
+        ):
+            return p
+    return len(kinds)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab padded to a multiple of 256 so TP in_shardings divide evenly
+    (the standard production practice; logits are sliced back to the true
+    vocab before the loss, padded embedding rows are never gathered)."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+
+def _dense_proj(key, shape, dtype, scale=None):
+    scale = (shape[0] ** -0.5) if scale is None else scale
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def _init_attn(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "q_proj": _dense_proj(ks[0], (d, cfg.q_dim), dtype),
+        "k_proj": _dense_proj(ks[1], (d, cfg.kv_dim), dtype),
+        "v_proj": _dense_proj(ks[2], (d, cfg.kv_dim), dtype),
+        "o_proj": _dense_proj(ks[3], (cfg.q_dim, d), dtype),
+    }
+    return p
+
+
+def _init_dense_ffn(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.family == "audio":  # gelu MLP with biases (whisper)
+        return {
+            "wi": _dense_proj(ks[0], (d, f), dtype),
+            "bi": jnp.zeros((f,), dtype),
+            "wo": _dense_proj(ks[1], (f, d), dtype),
+            "bo": jnp.zeros((d,), dtype),
+        }
+    return {
+        "w_gate": _dense_proj(ks[0], (d, f), dtype),
+        "w_in": _dense_proj(ks[1], (d, f), dtype),
+        "w_out": _dense_proj(ks[2], (f, d), dtype),
+    }
+
+
+def _init_layer(key, cfg: ModelConfig, kind: tuple[str, str], dtype,
+                cross_attention: bool = False) -> dict:
+    mixer, ffn = kind
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if mixer == "attn":
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    elif mixer == "mamba":
+        p["mamba"] = mamba_lib.init_mamba(ks[0], cfg, dtype)
+    elif mixer == "rwkv":
+        p.update(rwkv_lib.init_rwkv_layer(ks[0], cfg, dtype))
+    if cross_attention:
+        p["ln_cross"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["cross"] = _init_attn(ks[1], cfg, dtype, cross=True)
+    p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if mixer != "rwkv":
+        if ffn == "moe":
+            p["moe"] = moe_lib.init_moe(ks[2], cfg, dtype)
+        else:
+            p["ffn"] = _init_dense_ffn(ks[2], cfg, dtype)
+    if cfg.family == "audio":  # layernorm biases
+        p["ln1_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if "ln2" in p:
+            p["ln2_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cross_attention:
+            p["ln_cross_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _stacked_blocks(key, cfg: ModelConfig, dtype, *, n_layers: int,
+                    kinds: list[tuple[str, str]], period: int,
+                    cross_attention: bool = False):
+    n_periods = n_layers // period
+    out = {}
+    for j in range(period):
+        keys = jax.random.split(jax.random.fold_in(key, j), n_periods)
+        out[f"pos{j}"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, kinds[j], dtype,
+                                  cross_attention=cross_attention)
+        )(keys)
+    return out
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = L.resolve_dtype(cfg.dtype)
+    kinds = layer_kinds(cfg)
+    period = pattern_period(cfg)
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (padded_vocab(cfg), cfg.d_model),
+                                   dtype) * cfg.d_model ** -0.5,
+        "blocks": _stacked_blocks(ks[1], cfg, dtype, n_layers=cfg.n_layers,
+                                  kinds=kinds, period=period,
+                                  cross_attention=cfg.cross_attention),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.family == "audio":
+        params["ln_f_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            ks[2], (cfg.d_model, padded_vocab(cfg)), dtype) * cfg.d_model ** -0.5
+    if cfg.encoder_decoder:
+        params["encoder"] = {
+            "blocks": _stacked_blocks(
+                ks[3], cfg, dtype, n_layers=cfg.n_encoder_layers,
+                kinds=[("attn", "dense")] * cfg.n_encoder_layers, period=1),
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_f_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# Layer application
+# --------------------------------------------------------------------------
+
+
+def _norm(x, w, b=None, eps=1e-5):
+    if b is not None:
+        return L.layer_norm(x, w, b, eps)
+    return L.rms_norm(x, w, eps)
+
+
+def _apply_ffn(h, p, cfg: ModelConfig, kind: str):
+    """Returns (out, aux_loss)."""
+    if kind == "moe":
+        return moe_lib.moe_ffn(h, p["moe"], cfg)
+    f = p["ffn"]
+    if cfg.family == "audio":
+        return L.gelu_mlp(h, f["wi"], f["bi"], f["wo"], f["bo"]), 0.0
+    return L.swiglu_mlp(h, f["w_gate"], f["w_in"], f["w_out"]), 0.0
+
+
+def _attn_block(h, p, cfg: ModelConfig, positions, *, causal, window,
+                kv_override=None, want_cache=False):
+    b, s, d = h.shape
+    q = (h @ p["q_proj"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    kv_cache = None
+    if kv_override is None:
+        k = (h @ p["k_proj"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ p["v_proj"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.use_rope:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        if want_cache:
+            t = s if window is None else min(s, window)
+            kv_cache = {"k": k[:, s - t:], "v": v[:, s - t:]}
+    else:
+        k, v = kv_override  # cross-attention: precomputed encoder k/v
+    out = L.attention(q, k, v, causal=causal and kv_override is None,
+                      window=window)
+    out = out.reshape(b, s, cfg.q_dim)
+    return out @ p["o_proj"], kv_cache
+
+
+def _apply_layer(h, p, cfg: ModelConfig, kind: tuple[str, str], positions,
+                 *, causal=True, enc_kv=None, want_cache=False):
+    """Full-sequence layer application (train / prefill).
+
+    Returns (h, aux_loss, cache_contribution-or-None).
+    """
+    from jax.ad_checkpoint import checkpoint_name
+
+    mixer, ffn = kind
+    aux = 0.0
+    lb = p.get("ln1_b")
+    cache = None
+    if mixer == "attn":
+        a, cache = _attn_block(
+            _norm(h, p["ln1"], lb, cfg.norm_eps), p["attn"], cfg,
+            positions, causal=causal, window=cfg.sliding_window,
+            want_cache=want_cache)
+        a = checkpoint_name(a, "mixer_out")
+        h = h + a
+    elif mixer == "mamba":
+        c0 = (mamba_lib.init_mamba_cache(cfg, h.shape[0], h.dtype)
+              if want_cache else None)
+        a, cache = mamba_lib.mamba_forward(
+            _norm(h, p["ln1"], lb, cfg.norm_eps), p["mamba"], cfg, c0)
+        h = h + a
+    elif mixer == "rwkv":
+        c0 = (rwkv_lib.init_rwkv_cache(cfg, h.shape[0], h.dtype)
+              if want_cache else None)
+        a, c1 = rwkv_lib.rwkv_time_mix(
+            _norm(h, p["ln1"], lb, cfg.norm_eps), p["tm"], cfg, c0)
+        h = h + a
+        c, c2 = rwkv_lib.rwkv_channel_mix(
+            _norm(h, p["ln2"], None, cfg.norm_eps), p["cm"], cfg, c0)
+        if want_cache:
+            cache = {"shift_tm": c1["shift_tm"], "wkv": c1["wkv"],
+                     "shift_cm": c2["shift_cm"]}
+        return h + c, aux, cache
+    if enc_kv is not None and "cross" in p:
+        ca, _ = _attn_block(_norm(h, p["ln_cross"], p.get("ln_cross_b"),
+                                  cfg.norm_eps), p["cross"], cfg, positions,
+                            causal=False, window=None, kv_override=enc_kv)
+        h = h + ca
+    f, aux = _apply_ffn(_norm(h, p["ln2"], p.get("ln2_b"), cfg.norm_eps),
+                        p, cfg, ffn)
+    f = checkpoint_name(f, "ffn_out")
+    return h + f, aux, cache
+
+
+def _run_stack(h, blocks, cfg: ModelConfig, kinds, period, positions, *,
+               causal=True, enc_kv=None, remat: str = "none",
+               want_cache=False):
+    """lax.scan over pattern repetitions; returns (h, total_aux, caches).
+
+    With ``want_cache`` the per-layer cache contributions come out as scan
+    ``ys`` — already stacked (n_periods, ...), the decode-cache layout.
+    """
+
+    def body(carry, blk):
+        hh, aux = carry
+        caches = {}
+        for j in range(period):
+            hh, a, c = _apply_layer(hh, blk[f"pos{j}"], cfg, kinds[j],
+                                    positions, causal=causal, enc_kv=enc_kv,
+                                    want_cache=want_cache)
+            aux = aux + a
+            if want_cache:
+                caches[f"pos{j}"] = c
+        hh = shard(hh, "batch", None, None)
+        return (hh, aux), (caches if want_cache else None)
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    elif remat == "outputs":
+        # Save each sub-block's post-collective output: the backward pass
+        # reuses them instead of recomputing the TP all-reduces (collective
+        # term down ~1/3, memory term up — the §Perf remat trade).
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "ffn_out"))
+    (h, aux), caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), blocks)
+    return h, aux, caches
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill) and loss
+# --------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "audio":
+        pos = L.sinusoidal_positions(jnp.arange(tokens.shape[1]), cfg.d_model)
+        e = e + pos[None].astype(e.dtype)
+    return shard(e, "batch", None, None)
+
+
+def _lm_head(params, cfg: ModelConfig, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (h @ w).astype(jnp.float32)
+    logits = shard(logits, "batch", None, "model")
+    if logits.shape[-1] != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    return logits
+
+
+def _encode(params, cfg: ModelConfig, frames, remat="none"):
+    """Whisper-style encoder over stub frame embeddings (B, S, D)."""
+    pos = L.sinusoidal_positions(jnp.arange(frames.shape[1]), cfg.d_model)
+    h = frames + pos[None].astype(frames.dtype)
+    kinds = [("attn", "dense")] * cfg.n_encoder_layers
+    h, _, _ = _run_stack(h, params["encoder"]["blocks"], cfg, kinds, 1,
+                         jnp.arange(frames.shape[1])[None], causal=False,
+                         remat=remat)
+    return _norm(h, params["encoder"]["ln_f"], params["encoder"]["ln_f_b"],
+                 cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, training: bool,
+            remat: str = "none"):
+    """Full-sequence forward.  Returns (logits, aux_loss).
+
+    ``batch`` keys: 'tokens' (B, S); VLM: + 'vision_embeds' (B, Sv, D);
+    audio: 'frames' (B, Se, D) + 'tokens' (B, Sd).
+    """
+    tokens = batch["tokens"]
+    h = _embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(h.dtype)
+        h = jnp.concatenate([vis, h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kinds = layer_kinds(cfg)
+    period = pattern_period(cfg)
+
+    enc_kv = None
+    if cfg.encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"], remat=remat)
+        # Cross K/V are recomputed inside each scanned layer from enc_out
+        # (cheaper to re-project than to stack T_enc·L activations).
+        enc_kv = enc_out
+
+    if enc_kv is not None:
+        h, aux = _run_stack_crossattn(h, params["blocks"], cfg, kinds, period,
+                                      positions, enc_out=enc_kv, remat=remat)
+    else:
+        h, aux, _ = _run_stack(h, params["blocks"], cfg, kinds, period,
+                               positions, causal=True, remat=remat)
+    h = _norm(h, params["ln_f"], params.get("ln_f_b"), cfg.norm_eps)
+    if cfg.family == "vlm":
+        h = h[:, batch["vision_embeds"].shape[1]:]
+    return _lm_head(params, cfg, h), aux
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, pad_to: int | None = None):
+    """Serving prefill: full-sequence pass -> (last-token logits, cache).
+
+    The decode cache comes out of the layer scan as stacked ``ys`` — KV for
+    attention layers (ring-truncated for SWA), final conv/SSM/WKV states for
+    Mamba/RWKV layers — plus the position index, matching ``init_cache``.
+
+    ``pad_to`` grows full-attention KV caches beyond the prompt length so
+    subsequent decode steps have slots to write into (SWA caches are ring
+    buffers of size ``window`` and are never padded; ring alignment requires
+    ``prompt_len % window == 0``, which all assigned shapes satisfy).
+    """
+    if cfg.encoder_decoder:
+        # Audio prefill = encoder forward (DESIGN.md shape mapping).
+        enc = _encode(params, cfg, batch["frames"])
+        return enc, None
+    tokens = batch["tokens"]
+    h = _embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm":
+        h = jnp.concatenate([batch["vision_embeds"].astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kinds = layer_kinds(cfg)
+    period = pattern_period(cfg)
+    h, _, caches = _run_stack(h, params["blocks"], cfg, kinds, period,
+                              positions, causal=True, want_cache=True)
+    if pad_to is not None and cfg.sliding_window is None:
+        def grow(path, leaf):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name in ("k", "v") and leaf.shape[2] < pad_to:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, pad_to - leaf.shape[2])
+                return jnp.pad(leaf, pad)
+            return leaf
+        caches = jax.tree_util.tree_map_with_path(grow, caches)
+    h = _norm(h[:, -1:], params["ln_f"], params.get("ln_f_b"), cfg.norm_eps)
+    caches["index"] = jnp.asarray(s, jnp.int32)
+    return _lm_head(params, cfg, h), caches
+
+
+def _run_stack_crossattn(h, blocks, cfg, kinds, period, positions, *,
+                         enc_out, remat):
+    def body(carry, blk):
+        hh, aux = carry
+        for j in range(period):
+            p = blk[f"pos{j}"]
+            b, t = enc_out.shape[0], enc_out.shape[1]
+            k = (enc_out @ p["cross"]["k_proj"]).reshape(
+                b, t, cfg.n_kv_heads, cfg.head_dim)
+            v = (enc_out @ p["cross"]["v_proj"]).reshape(
+                b, t, cfg.n_kv_heads, cfg.head_dim)
+            hh, a, _ = _apply_layer(hh, p, cfg, kinds[j], positions,
+                                    causal=True, enc_kv=(k, v))
+            aux = aux + a
+        return (hh, aux), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), blocks)
+    return h, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, training: bool = True,
+            remat: str = "none", aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, batch, training=training, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        nll = nll * mask
+        loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+    else:
+        loss = nll.mean()
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Decode (serving)
+# --------------------------------------------------------------------------
+
+
+def _attn_cache_init(cfg: ModelConfig, batch: int, seq: int, dtype) -> dict:
+    t = seq if cfg.sliding_window is None else min(seq, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Decode cache pytree: stacked per pattern repetition (for scan)."""
+    dtype = L.resolve_dtype(cfg.dtype)
+    kinds = layer_kinds(cfg)
+    period = pattern_period(cfg)
+    n_periods = cfg.n_layers // period
+
+    def one(kind):
+        mixer, _ = kind
+        if mixer == "attn":
+            c = _attn_cache_init(cfg, batch, seq, dtype)
+        elif mixer == "mamba":
+            c = mamba_lib.init_mamba_cache(cfg, batch, dtype)
+        else:
+            c = rwkv_lib.init_rwkv_cache(cfg, batch, dtype)
+        return c
+
+    def stack(c):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), c)
+
+    cache: dict[str, Any] = {
+        f"pos{j}": stack(one(kinds[j])) for j in range(period)
+    }
+    cache["index"] = jnp.zeros((), jnp.int32)
+    if cfg.encoder_decoder:
+        cache["cross"] = {
+            "pos0": jax.tree.map(
+                lambda x: jnp.zeros(
+                    (n_periods, batch, cfg.encoder_context_len,
+                     cfg.n_kv_heads, cfg.head_dim), dtype),
+                {"k": 0, "v": 0}),
+        }
+    return cache
+
+
+def _attn_decode(h, p, cfg: ModelConfig, cache, index, cross_kv=None):
+    """One-token attention with cache write.  h: (B, 1, D)."""
+    b = h.shape[0]
+    q = (h @ p["q_proj"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = (h @ p["k_proj"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ p["v_proj"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    pos = jnp.broadcast_to(index[None, None], (b, 1))
+    if cfg.use_rope:
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+    t = cache["k"].shape[1]
+    write_at = index % t  # ring buffer for SWA; plain index otherwise
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, write_at, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, write_at, 0, 0))
+    cache_len = jnp.minimum(index + 1, t)
+    out = L.decode_attention(q, k_cache, v_cache, cache_len)
+    out = out.reshape(b, 1, cfg.q_dim) @ p["o_proj"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _decode_layer(h, p, cfg: ModelConfig, kind, cache, index, cross_kv=None):
+    mixer, ffn = kind
+    lb = p.get("ln1_b")
+    if mixer == "attn":
+        a, new_c = _attn_decode(_norm(h, p["ln1"], lb, cfg.norm_eps),
+                                p["attn"], cfg, cache, index)
+        h = h + a
+    elif mixer == "mamba":
+        a, new_c = mamba_lib.mamba_decode_step(
+            _norm(h, p["ln1"], lb, cfg.norm_eps), p["mamba"], cfg, cache)
+        h = h + a
+    else:  # rwkv
+        a, c1 = rwkv_lib.rwkv_time_mix(
+            _norm(h, p["ln1"], lb, cfg.norm_eps), p["tm"], cfg, cache)
+        h = h + a
+        c, c2 = rwkv_lib.rwkv_channel_mix(
+            _norm(h, p["ln2"], None, cfg.norm_eps), p["cm"], cfg, cache)
+        new_c = {**c1, **c2, "wkv": c1["wkv"]}
+        return h + c, new_c
+    if cross_kv is not None and "cross" in p:
+        b = h.shape[0]
+        q = (_norm(h, p["ln_cross"], p.get("ln_cross_b"), cfg.norm_eps)
+             @ p["cross"]["q_proj"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        t_enc = cross_kv["k"].shape[1]
+        ca = L.decode_attention(q, cross_kv["k"], cross_kv["v"],
+                                jnp.asarray(t_enc, jnp.int32))
+        h = h + ca.reshape(b, 1, cfg.q_dim) @ p["cross"]["o_proj"]
+    f, _ = _apply_ffn(_norm(h, p["ln2"], p.get("ln2_b"), cfg.norm_eps),
+                      p, cfg, ffn)
+    return h + f, new_c
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, batch: dict):
+    """One token for every sequence.  batch: {'tokens': (B, 1)}.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "audio":
+        pe = L.sinusoidal_positions(cache["index"][None], cfg.d_model)
+        h = h + pe[None].astype(h.dtype)
+    h = shard(h, "batch", None, None)
+    kinds = layer_kinds(cfg)
+    period = pattern_period(cfg)
+    index = cache["index"]
+
+    def body(hh, xs):
+        blk, ccs = xs[0], xs[1]
+        cross = xs[2] if len(xs) > 2 else None
+        new_ccs = {}
+        for j in range(period):
+            ck = f"pos{j}"
+            cross_kv = cross["pos0"] if cross is not None else None
+            hh, nc = _decode_layer(hh, blk[ck], cfg, kinds[j], ccs[ck], index,
+                                   cross_kv=cross_kv)
+            new_ccs[ck] = nc
+        return hh, new_ccs
+
+    layer_caches = {k: v for k, v in cache.items() if k.startswith("pos")}
+    xs = (params["blocks"], layer_caches)
+    if cfg.encoder_decoder:
+        xs = xs + (cache["cross"],)
+    h, new_layer_caches = jax.lax.scan(body, h, xs)
+    h = _norm(h, params["ln_f"], params.get("ln_f_b"), cfg.norm_eps)
+    logits = _lm_head(params, cfg, h)
+    new_cache = dict(cache)
+    new_cache.update(new_layer_caches)
+    new_cache["index"] = index + 1
+    return logits, new_cache

@@ -1,0 +1,16 @@
+"""Optimizers, schedules and gradient transforms."""
+from repro.optim.grad import (  # noqa: F401
+    accumulate_microbatches,
+    clip_by_global_norm,
+    compress_grads,
+    global_norm,
+)
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    OptState,
+    adamw,
+    lion,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedule import make_schedule  # noqa: F401

@@ -1,0 +1,137 @@
+"""Hand-built optimizers (AdamW, SGD-momentum, Lion) as pure pytree maps.
+
+All state lives in a pytree mirroring the params, which lets the sharding
+layer ZeRO-shard it (``repro.parallel.sharding.zero1_spec``) without the
+optimizer knowing.  Master weights: when params are bf16, AdamW keeps an
+fp32 copy in state (mixed-precision training) and emits bf16 updates.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "OptState", "adamw", "sgd", "lion", "make_optimizer"]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any  # optimizer-specific pytree(s)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jnp.ndarray], tuple[Any, OptState]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    """AdamW with decoupled weight decay and fp32 master weights."""
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        master = _f32(params)
+        return OptState(jnp.zeros((), jnp.int32),
+                        {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+                         "master": master})
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            new_master = master - lr * (mh / (jnp.sqrt(vh) + eps)
+                                        + weight_decay * master)
+            return m, v, new_master
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.inner["m"])
+        flat_v = treedef.flatten_up_to(state.inner["v"])
+        flat_w = treedef.flatten_up_to(state.inner["master"])
+        out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+        new_m = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        new_master = treedef.unflatten([o[2] for o in out])
+        new_params = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), new_master, params
+        )
+        return new_params, OptState(step, {"m": new_m, "v": new_v,
+                                           "master": new_master})
+
+    return Optimizer(init, update)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        vel = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), {"vel": vel})
+
+    def update(grads, state, params, lr):
+        def upd(g, v, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            v = momentum * v + g
+            d = g + momentum * v if nesterov else v
+            return v, (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state.inner["vel"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_vel = treedef.unflatten([o[0] for o in out])
+        new_params = treedef.unflatten([o[1] for o in out])
+        return new_params, OptState(state.step + 1, {"vel": new_vel})
+
+    return Optimizer(init, update)
+
+
+def lion(b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1) -> Optimizer:
+    """Lion (EvoLved Sign Momentum) — sign updates, one state tensor."""
+
+    def init(params):
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), {"m": m})
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            d = jnp.sign(b1 * m + (1 - b1) * g)
+            new_p = pf - lr * (d + weight_decay * pf)
+            new_m = b2 * m + (1 - b2) * g
+            return new_m, new_p.astype(p.dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.inner["m"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (treedef.unflatten([o[1] for o in out]),
+                OptState(state.step + 1,
+                         {"m": treedef.unflatten([o[0] for o in out])}))
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "sgd":
+        return sgd(**{k: v for k, v in kw.items()
+                      if k in ("momentum", "nesterov", "weight_decay")})
+    if name == "lion":
+        return lion(**{k: v for k, v in kw.items()
+                       if k in ("b1", "b2", "weight_decay")})
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,42 @@
+"""Learning-rate schedules as pure ``step -> lr`` functions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_linear", "constant", "make_schedule"]
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        lin = peak_lr * (1 - (1 - final_frac) * t)
+        return jnp.where(step < warmup_steps, warm, lin)
+    return fn
+
+
+def constant(peak_lr: float):
+    return lambda step: jnp.full((), peak_lr, jnp.float32)
+
+
+def make_schedule(name: str, peak_lr: float, warmup_steps: int, total_steps: int):
+    if name == "cosine":
+        return warmup_cosine(peak_lr, warmup_steps, total_steps)
+    if name == "linear":
+        return warmup_linear(peak_lr, warmup_steps, total_steps)
+    if name == "constant":
+        return constant(peak_lr)
+    raise ValueError(f"unknown schedule {name!r}")

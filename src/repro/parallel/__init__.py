@@ -1,0 +1,12 @@
+"""Distribution: sharding rules, collectives, pipeline parallelism."""
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    batch_pspec,
+    cache_pspec,
+    current_rules,
+    logical_pspec,
+    param_pspec,
+    shard,
+    sharding_rules,
+    zero1_pspec,
+)

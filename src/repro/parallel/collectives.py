@@ -1,0 +1,45 @@
+"""Collective helpers: compressed and hierarchical reductions.
+
+Used inside ``shard_map`` regions (manual-collective code paths, e.g. the
+pipeline schedule); the pjit paths get their collectives from SPMD, where
+compression happens by casting before the reduction (``optim.grad``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["psum_compressed", "hierarchical_psum", "ring_all_gather"]
+
+
+def psum_compressed(x: jnp.ndarray, axis: str, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """All-reduce in a narrower dtype (halves DP collective bytes)."""
+    return jax.lax.psum(x.astype(dtype), axis).astype(x.dtype)
+
+
+def hierarchical_psum(x: jnp.ndarray, inner_axis: str, outer_axis: str
+                      ) -> jnp.ndarray:
+    """Reduce over fast links first, then the slow (pod/DCI) axis.
+
+    With SPMD this schedule is implicit; in manual regions the split keeps
+    the DCI payload to one already-reduced tensor per pod.
+    """
+    return jax.lax.psum(jax.lax.psum(x, inner_axis), outer_axis)
+
+
+def ring_all_gather(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Explicit ring all-gather via ppermute (collective-overlap building
+    block for manual pipelines)."""
+    n = jax.lax.axis_size(axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    idx = jax.lax.axis_index(axis)
+    pieces = [x] * n
+    cur = x
+    for step in range(1, n):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        pieces[step] = cur
+    # piece j on device i originated at device (i - j) mod n; roll into order
+    stacked = jnp.stack(pieces, axis=0)
+    order = (idx - jnp.arange(n)) % n
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n))
+    return jnp.take(stacked, inv, axis=0)

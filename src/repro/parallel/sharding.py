@@ -1,0 +1,245 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP + pod axis).
+
+Models never name mesh axes: they call :func:`shard` with *logical* axis
+names; the active :class:`AxisRules` (installed by the launcher via
+``with sharding_rules(...)``) maps logical names to mesh axes.  Outside a
+rules context every constraint is a no-op, so smoke tests run unsharded.
+
+Parameter shardings are *inferred* from pytree paths + shapes
+(:func:`param_pspec`) — one rule table covers all ten architectures:
+
+* vocab-sized dims -> ``model``      (TP vocab/embedding sharding)
+* d_ff / q_dim / d_inner dims -> ``model``  (Megatron TP)
+* the matching contraction dim of output projections -> ``model``
+* optimizer state (via ``zero1_pspec``) additionally shards the *first*
+  remaining unsharded dim over ``data`` (ZeRO-1).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = [
+    "AxisRules", "sharding_rules", "current_rules", "shard", "logical_pspec",
+    "param_pspec", "zero1_pspec", "batch_pspec", "cache_pspec",
+]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name -> tuple of mesh axis names."""
+
+    rules: dict[str, tuple[str, ...]] = field(default_factory=dict)
+    mesh_shape: dict[str, int] = field(default_factory=dict)
+    mesh: object = None  # the jax Mesh — needed by shard_map code paths
+
+    def with_mesh(self, mesh) -> "AxisRules":
+        import dataclasses
+        return dataclasses.replace(self, mesh=mesh)
+
+    @staticmethod
+    def default(multi_pod: bool, *, pods: int = 2, data: int = 16,
+                model: int = 16) -> "AxisRules":
+        batch_axes = ("pod", "data") if multi_pod else ("data",)
+        shape = {"data": data, "model": model}
+        if multi_pod:
+            shape["pod"] = pods
+        return AxisRules(
+            rules={
+                "batch": batch_axes,
+                "model": ("model",),
+                "data": ("data",),
+                "replicated": (),
+            },
+            mesh_shape=shape,
+        )
+
+    def axes(self, logical: str) -> tuple[str, ...]:
+        return self.rules.get(logical, ())
+
+    def size(self, logical: str) -> int:
+        n = 1
+        for ax in self.axes(logical):
+            n *= self.mesh_shape.get(ax, 1)
+        return n
+
+
+_local = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Optional[AxisRules]):
+    prev = getattr(_local, "rules", None)
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_local, "rules", None)
+
+
+def logical_pspec(*logical: Optional[str]) -> P:
+    """Resolve logical axis names to a PartitionSpec under current rules."""
+    rules = current_rules()
+    if rules is None:
+        return P()
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+        else:
+            axes = rules.axes(name)
+            out.append(axes if len(axes) != 1 else axes[0])
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical names; no-op without rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_pspec(*logical))
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding inference
+# --------------------------------------------------------------------------
+
+# Leaf-name hints: substrings of the flattened pytree path.
+_SHARD_LAST = ("w_in", "w_gate", "wi", "in_proj", "q_proj", "k_proj",
+               "v_proj", "dt_proj", "receptance", "key", "value",
+               "gate", "head")
+_SHARD_FIRST = ("w_out", "wo", "out_proj", "o_proj", "x_proj", "a_log",
+                "output")
+
+
+def param_pspec(path: str, shape: tuple[int, ...], cfg: ModelConfig) -> P:
+    """Infer the TP PartitionSpec of one parameter from its path + shape.
+
+    Exactly one dim is sharded over ``model``:
+
+    * embedding tables: the vocab-sized dim;
+    * name-hinted input-side projections (q/k/v, w_in, ...): the last dim;
+    * name-hinted output-side projections (o_proj, w_out, ...): dim -2
+      (the contraction dim, matching the activations they consume);
+    * otherwise: the right-most dim whose size is "wide" (d_ff / vocab /
+      q_dim / kv_dim / d_inner) and isn't d_model;
+    * 1-D params (norms, biases) and small dims replicate.
+    """
+    rules = current_rules()
+    model_axes = rules.axes("model") if rules else ("model",)
+    model_size = rules.size("model") if rules else 1
+    spec = [None] * len(shape)
+    if len(shape) <= 1:
+        return P(*spec)
+    lowered = path.lower()
+
+    def mark(dim: int) -> P:
+        # in_shardings require exact divisibility (constraints would pad);
+        # small or uneven dims replicate instead.  An empty model mapping
+        # (pure-DP rules for small models) replicates everything.
+        if (not model_axes or shape[dim] < 2 * model_size
+                or shape[dim] % model_size):
+            return P(*([None] * len(shape)))
+        spec[dim] = model_axes if len(model_axes) != 1 else model_axes[0]
+        return P(*spec)
+
+    wide_dims = {cfg.d_ff, cfg.vocab_size, cfg.q_dim, cfg.kv_dim,
+                 cfg.d_model * cfg.expand, 2 * cfg.d_model * cfg.expand}
+    wide_dims.discard(0)
+    if "/moe/" in lowered and len(shape) >= 3:
+        # ZeRO-3 expert storage: d_ff over `model` (TP) AND d_model over
+        # `data` (FSDP).  The layer all-gathers its experts over `data`
+        # (cheap — experts are f-sliced) and the autodiff transpose
+        # reduce-scatters the weight grads, so no param-shaped tensor is
+        # ever replicated (w_gate grads measured 3.8 GB ×L replicated).
+        data_axes = rules.axes("data") if rules else ("data",)
+        data_size = rules.size("data") if rules else 1
+        dspec = data_axes if len(data_axes) != 1 else data_axes[0]
+        p = [None] * len(shape)
+        f_dim = len(shape) - 1 if shape[-1] == cfg.d_ff else len(shape) - 2
+        d_dim = len(shape) - 1 if shape[-1] == cfg.d_model else len(shape) - 2
+        if shape[f_dim] == cfg.d_ff and shape[f_dim] % model_size == 0:
+            p[f_dim] = model_axes if len(model_axes) != 1 else model_axes[0]
+        if (d_dim != f_dim and shape[d_dim] == cfg.d_model
+                and shape[d_dim] % max(data_size, 1) == 0 and data_size > 1):
+            p[d_dim] = dspec
+        return P(*p)
+    if "embed" in lowered:
+        pv = -(-cfg.vocab_size // 256) * 256  # padded vocab (transformer.py)
+        for i, d in enumerate(shape):
+            if d in (cfg.vocab_size, pv):
+                return mark(i)
+        return P(*spec)
+    if any(h in lowered for h in _SHARD_FIRST):
+        return mark(len(shape) - 2)
+    if any(h in lowered for h in _SHARD_LAST):
+        return mark(len(shape) - 1)
+    for i in range(len(shape) - 1, -1, -1):
+        if shape[i] in wide_dims and shape[i] != cfg.d_model:
+            return mark(i)
+    return P(*spec)
+
+
+def zero1_pspec(pspec: P, shape: tuple[int, ...], rules: AxisRules) -> P:
+    """ZeRO-1: additionally shard the largest un-sharded dim over ``data``.
+
+    Applied to optimizer state (fp32 master/moments) only; falls back to the
+    TP spec when no dim is cleanly divisible.
+    """
+    data_axes = rules.axes("data")
+    if not data_axes:
+        return pspec
+    data_size = rules.size("data")
+    if data_size <= 1:
+        return pspec
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    used = set()
+    for e in entries:
+        for ax in (e if isinstance(e, tuple) else (e,)):
+            used.add(ax)
+    if any(ax in used for ax in data_axes):
+        return pspec  # already data-sharded (ZeRO-3 expert storage)
+    best, best_dim = None, 0
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None and d % data_size == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is None:
+        return pspec
+    entries[best] = data_axes if len(data_axes) != 1 else data_axes[0]
+    return P(*entries)
+
+
+def batch_pspec(rules: AxisRules, global_batch: int) -> tuple[Optional[object], ...]:
+    """Mesh axes used for the batch dim — as many of (pod, data) as divide."""
+    axes = [ax for ax in rules.axes("batch")]
+    n = 1
+    used = []
+    for ax in axes:
+        sz = rules.mesh_shape.get(ax, 1)
+        if global_batch % (n * sz) == 0:
+            used.append(ax)
+            n *= sz
+    return tuple(used) if used else ()
+
+
+def cache_pspec(rules: AxisRules, global_batch: int) -> tuple:
+    """(batch_axes, seq_axes) for KV caches — SP over leftover axes.
+
+    Decode with large batch: batch over (pod, data), cache sequence over
+    model.  Tiny batch (long-context): sequence over every unused axis.
+    """
+    batch_axes = batch_pspec(rules, global_batch)
+    all_axes = ["pod", "data", "model"] if "pod" in rules.mesh_shape else ["data", "model"]
+    seq_axes = tuple(ax for ax in all_axes if ax not in batch_axes)
+    return batch_axes, seq_axes

@@ -1,0 +1,96 @@
+"""Approximated Spatial Masking: exactness, the paper's Fig. 4a ordering."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import asm as A
+from repro.core import dct as D
+
+
+def _rand_blocks(rng, n=64):
+    """Paper §5.3 protocol: random 4x4 blocks box-upscaled to 8x8."""
+    small = rng.uniform(-1, 1, size=(n, 4, 4))
+    big = np.kron(small, np.ones((2, 2)))
+    return D.dct2(big).reshape(n, 64)[:, D.zigzag_permutation()]
+
+
+def test_asm_exact_at_full_bands(rng):
+    coef = jnp.asarray(_rand_blocks(rng))
+    out = A.asm_relu(coef, phi=A.EXACT_PHI)
+    oracle = A.spatial_relu_oracle(coef)
+    assert np.allclose(out, oracle, atol=1e-10)
+
+
+def test_asm_beats_apx_at_every_phi(rng):
+    """Paper Fig. 4a: ASM RMSE < APX RMSE for phi = 1..14."""
+    coef = jnp.asarray(_rand_blocks(rng, 256))
+    oracle = A.spatial_relu_oracle(coef)
+    for phi in range(1, 15):
+        e_asm = float(jnp.sqrt(jnp.mean((A.asm_relu(coef, phi) - oracle) ** 2)))
+        e_apx = float(jnp.sqrt(jnp.mean((A.apx_relu(coef, phi) - oracle) ** 2)))
+        assert e_asm <= e_apx + 1e-9, (phi, e_asm, e_apx)
+
+
+def test_asm_error_decreases_with_phi(rng):
+    coef = jnp.asarray(_rand_blocks(rng, 256))
+    oracle = A.spatial_relu_oracle(coef)
+    errs = [float(jnp.mean((A.asm_relu(coef, phi) - oracle) ** 2))
+            for phi in (2, 6, 10, 14)]
+    assert errs[0] >= errs[1] >= errs[2] >= errs[3]
+    assert errs[-1] < 1e-12
+
+
+def test_asm_preserves_values_where_mask_correct(rng):
+    """The paper's key claim (Fig. 1): ASM errors live only in the mask."""
+    coef = jnp.asarray(_rand_blocks(rng, 32))
+    recon = jnp.asarray(D.reconstruction_matrix())
+    spatial = coef @ recon  # exact pixels
+    phi = 6
+    approx_mask = np.asarray(A.nonnegative_mask(coef, phi))
+    true_mask = np.asarray(spatial > 0)
+    out_spatial = np.asarray(A.asm_relu(coef, phi) @ recon)
+    relu_spatial = np.maximum(np.asarray(spatial), 0.0)
+    agree = approx_mask == true_mask
+    # Wherever the approximate mask is right, the value is *exact*.
+    assert np.allclose(out_spatial[agree], relu_spatial[agree], atol=1e-6)
+
+
+def test_piecewise_general_matches_relu(rng):
+    coef = jnp.asarray(_rand_blocks(rng))
+    a = A.asm_piecewise(coef, A.RELU, phi=14)
+    b = A.asm_relu(coef, phi=14)
+    assert np.allclose(a, b, atol=1e-8)
+
+
+def test_piecewise_leaky_relu(rng):
+    coef = jnp.asarray(_rand_blocks(rng))
+    recon = jnp.asarray(D.reconstruction_matrix())
+    out = A.asm_piecewise(coef, A.LEAKY_RELU, phi=14) @ recon
+    spatial = np.asarray(coef @ recon)
+    expect = np.where(spatial > 0, spatial, 0.01 * spatial)
+    assert np.allclose(out, expect, atol=1e-6)
+
+
+def test_scaled_convention_via_qtable(rng):
+    """Eq. 20: quantization diagonals folded into the ASM matrices."""
+    q = D.quantization_table(50)
+    coef_dct = jnp.asarray(_rand_blocks(rng))
+    coef_jpeg = coef_dct / jnp.asarray(q)
+    out_jpeg = A.asm_relu(coef_jpeg, phi=14, qtable=q)
+    out_dct = A.asm_relu(coef_dct, phi=14)
+    np.testing.assert_allclose(out_jpeg * jnp.asarray(q), out_dct,
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 14))
+def test_asm_output_energy_bounded(seed, phi):
+    """ReLU is a projection: masked output never exceeds input energy
+    (holds for ASM because masking zeroes pixels of the exact values)."""
+    r = np.random.default_rng(seed)
+    coef = jnp.asarray(_rand_blocks(r, 8))
+    out = A.asm_relu(coef, phi)
+    in_e = float(jnp.sum(coef * coef))
+    out_e = float(jnp.sum(out * out))
+    assert out_e <= in_e + 1e-6

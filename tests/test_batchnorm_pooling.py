@@ -1,0 +1,68 @@
+"""JPEG-domain batch norm (Alg. 3) and pooling equivalences."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import jpeg as J
+from repro.core.batchnorm import (
+    BatchNormParams, BatchNormState, batchnorm_jpeg, batchnorm_spatial,
+    init_batchnorm,
+)
+from repro.core.pooling import (
+    global_avg_pool_jpeg, global_avg_pool_spatial, residual_add,
+)
+
+
+def _layouts(rng, shape=(8, 4, 16, 16)):
+    x = jnp.asarray(rng.normal(size=shape) * 2 + 0.5, jnp.float32)
+    coef = jnp.moveaxis(J.jpeg_encode(x, scaled=False), 1, 3)
+    return x, coef
+
+
+def test_batchnorm_training_equivalence(rng):
+    x, coef = _layouts(rng)
+    params, state = init_batchnorm(4)
+    sp, st_sp = batchnorm_spatial(x, params, state, training=True)
+    jp, st_jp = batchnorm_jpeg(coef, params, state, training=True)
+    back = J.jpeg_decode(jnp.moveaxis(jp, 3, 1), scaled=False)
+    assert np.allclose(back, sp, atol=1e-4)
+    assert np.allclose(st_jp.running_mean, st_sp.running_mean, atol=1e-6)
+    assert np.allclose(st_jp.running_var, st_sp.running_var, atol=1e-5)
+
+
+def test_batchnorm_inference_equivalence(rng):
+    x, coef = _layouts(rng)
+    params = BatchNormParams(jnp.asarray([1.5, 0.5, 2.0, 1.0]),
+                             jnp.asarray([0.1, -0.2, 0.0, 0.3]))
+    state = BatchNormState(jnp.asarray([0.5, 0.1, -0.3, 0.0]),
+                           jnp.asarray([1.2, 0.8, 2.0, 1.5]))
+    sp, _ = batchnorm_spatial(x, params, state, training=False)
+    jp, st2 = batchnorm_jpeg(coef, params, state, training=False)
+    back = J.jpeg_decode(jnp.moveaxis(jp, 3, 1), scaled=False)
+    assert np.allclose(back, sp, atol=1e-4)
+    assert st2 is state  # running stats untouched at inference
+
+
+def test_mean_variance_theorem(rng):
+    """Paper Thm. 2 as realised by the implementation's statistics."""
+    x, coef = _layouts(rng, shape=(16, 1, 8, 8))
+    params, state = init_batchnorm(1)
+    _, st = batchnorm_jpeg(coef, params, state, training=True, momentum=1.0)
+    assert np.allclose(st.running_mean, np.asarray(x).mean(), atol=1e-6)
+    assert np.allclose(st.running_var, np.asarray(x).var(), atol=1e-5)
+
+
+def test_global_avg_pool(rng):
+    x, coef = _layouts(rng)
+    assert np.allclose(global_avg_pool_spatial(x),
+                       global_avg_pool_jpeg(coef), atol=1e-6)
+
+
+def test_residual_add_linearity(rng):
+    x1, c1 = _layouts(rng)
+    x2, c2 = _layouts(np.random.default_rng(1))
+    lhs = residual_add(c1, c2)
+    rhs = jnp.moveaxis(J.jpeg_encode(x1 + x2, scaled=False), 1, 3)
+    assert np.allclose(lhs, rhs, atol=1e-5)
+
+
+import numpy as np  # noqa: E402

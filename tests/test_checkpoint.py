@@ -1,0 +1,73 @@
+"""Fault-tolerant checkpointing: atomicity, corruption fallback, retention."""
+import json
+import os
+import shutil
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step_count": jnp.asarray(7)}
+
+
+def test_roundtrip(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(5, tree, extra={"data_state": {"seed": 0, "step": 9}})
+    restored = m.restore_latest(tree)
+    assert restored is not None
+    step, out, extra = restored
+    assert step == 5
+    np.testing.assert_array_equal(out["params"]["w"], tree["params"]["w"])
+    assert out["params"]["b"].dtype == np.asarray(tree["params"]["b"]).dtype
+    assert extra["data_state"]["step"] == 9
+
+
+def test_retention(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, tree)
+    assert m.steps() == [3, 4]
+
+
+def test_corruption_fallback(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=5)
+    m.save(1, tree)
+    m.save(2, tree)
+    # corrupt the newest checkpoint's array file
+    with open(os.path.join(str(tmp_path), "step_2", "arrays.npz"), "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    restored = m.restore_latest(tree)
+    assert restored is not None and restored[0] == 1  # fell back
+
+
+def test_tmp_dir_never_shadows(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=5)
+    m.save(1, tree)
+    # a crashed mid-write leaves a .tmp dir — must be ignored
+    os.makedirs(os.path.join(str(tmp_path), "step_9.tmp"))
+    assert m.steps() == [1]
+    assert m.restore_latest(tree)[0] == 1
+
+
+def test_async_save(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, tree, blocking=False)
+    m.wait()
+    assert m.steps() == [1]
+
+
+def test_restore_missing_leaf_raises(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, tree)
+    bigger = dict(tree)
+    bigger["extra_leaf"] = jnp.zeros((2,))
+    with pytest.raises(KeyError):
+        m.restore(1, bigger)

@@ -1,0 +1,80 @@
+"""DCT constants: orthonormality, zigzag, bands, quantization tables."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dct as D
+
+
+def test_dct_orthonormal():
+    d = D.dct_matrix()
+    assert np.allclose(d @ d.T, np.eye(8), atol=1e-12)
+    assert np.allclose(d.T @ d, np.eye(8), atol=1e-12)
+
+
+def test_dct2_idct2_roundtrip(rng):
+    x = rng.normal(size=(5, 8, 8))
+    assert np.allclose(D.idct2(D.dct2(x)), x, atol=1e-10)
+
+
+def test_zigzag_is_permutation():
+    zz = D.zigzag_permutation()
+    assert sorted(zz.tolist()) == list(range(64))
+    # JPEG standard: starts DC, then (0,1), (1,0), (2,0), (1,1), (0,2)...
+    order = D.zigzag_order()
+    assert order[0].tolist() == [0, 0]
+    assert order[1].tolist() == [0, 1]
+    assert order[2].tolist() == [1, 0]
+    assert order[3].tolist() == [2, 0]
+    assert order[63].tolist() == [7, 7]
+
+
+def test_band_structure():
+    bands = D.band_of_zigzag()
+    # bands are non-decreasing along zigzag order
+    assert (np.diff(bands) >= 0).all()
+    assert bands[0] == 0 and bands[-1] == 14
+    assert D.band_mask(14).all()
+    assert D.band_mask(0).sum() == 1
+
+
+def test_reconstruction_matrix_orthonormal():
+    r = D.reconstruction_matrix()
+    assert np.allclose(r @ r.T, np.eye(64), atol=1e-12)
+
+
+def test_truncated_reconstruction_zeroes_high_bands():
+    r4 = D.truncated_reconstruction_matrix(4)
+    mask = D.band_mask(4)
+    assert np.allclose(r4[~mask], 0.0)
+    assert not np.allclose(r4[mask], 0.0)
+
+
+def test_quantization_table_dc_is_mean():
+    q = D.quantization_table(50)
+    assert q[0] == 8.0  # paper §4.3 convention
+    q_noforce = D.quantization_table(50, dc_is_mean=False)
+    assert q_noforce[0] == 16.0  # IJG luma DC at quality 50
+
+
+@pytest.mark.parametrize("quality", [10, 50, 90])
+def test_quality_scaling_monotone(quality):
+    q_lo = D.quantization_table(max(quality - 9, 1), dc_is_mean=False)
+    q_hi = D.quantization_table(quality, dc_is_mean=False)
+    assert (q_hi <= q_lo).all()  # higher quality -> smaller steps
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_parseval_property(seed):
+    """Orthonormal DCT preserves energy (basis of the paper's Thm. 2)."""
+    x = np.random.default_rng(seed).normal(size=(8, 8))
+    y = D.dct2(x)
+    assert np.isclose((x * x).sum(), (y * y).sum(), rtol=1e-10)
+
+
+def test_harmonic_mixing_tensor_identity():
+    """Masking with an all-ones mask through H is the identity (Eq. 17)."""
+    h = D.harmonic_mixing_tensor()
+    eye = np.einsum("kpl->kl", h)
+    assert np.allclose(eye, np.eye(64), atol=1e-10)

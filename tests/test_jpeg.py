@@ -1,0 +1,65 @@
+"""The JPEG linear map: roundtrips, explicit J/J~ tensors, linearity."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dct as D
+from repro.core import jpeg as J
+
+
+@pytest.mark.parametrize("scaled", [True, False])
+@pytest.mark.parametrize("shape", [(8, 8), (16, 24), (2, 3, 32, 16)])
+def test_roundtrip(rng, scaled, shape):
+    img = rng.normal(size=shape)
+    co = J.jpeg_encode(jnp.asarray(img), scaled=scaled)
+    back = J.jpeg_decode(co, scaled=scaled)
+    assert np.allclose(back, img, atol=1e-5)
+
+
+def test_dc_coefficient_is_block_mean(rng):
+    img = rng.normal(size=(16, 16))
+    co = J.jpeg_encode(jnp.asarray(img), scaled=True)
+    means = np.asarray(img).reshape(2, 8, 2, 8).transpose(0, 2, 1, 3).mean((-1, -2))
+    assert np.allclose(np.asarray(co)[..., 0], means, atol=1e-6)
+    co_u = J.jpeg_encode(jnp.asarray(img), scaled=False)
+    assert np.allclose(np.asarray(co_u)[..., 0], 8 * means, atol=1e-5)
+
+
+def test_explicit_j_tensor_matches_encode(rng):
+    x = rng.normal(size=(16, 16))
+    jt = J.jpeg_tensor(16, 16)
+    c_tensor = np.einsum("hwxyk,hw->xyk", jt, x)
+    c_fn = np.asarray(J.jpeg_encode(jnp.asarray(x)))
+    assert np.allclose(c_tensor, c_fn, atol=1e-6)
+
+
+def test_explicit_ijpeg_tensor_inverts(rng):
+    x = rng.normal(size=(16, 16))
+    c = np.asarray(J.jpeg_encode(jnp.asarray(x)))
+    ijt = J.ijpeg_tensor(16, 16)
+    assert np.allclose(np.einsum("xykhw,xyk->hw", ijt, c), x, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.floats(-3, 3), st.floats(-3, 3))
+def test_linearity_property(seed, a, b):
+    """J(aF + bG) == a J(F) + b J(G) — the foundation of the whole paper."""
+    r = np.random.default_rng(seed)
+    f, g = r.normal(size=(2, 16, 16))
+    lhs = J.jpeg_encode(jnp.asarray(a * f + b * g))
+    rhs = a * J.jpeg_encode(jnp.asarray(f)) + b * J.jpeg_encode(jnp.asarray(g))
+    assert np.allclose(lhs, rhs, atol=1e-4)
+
+
+def test_lossy_roundtrip_reduces_energy(rng):
+    img = rng.normal(size=(32, 32))
+    out = J.jpeg_round_trip_lossy(jnp.asarray(img), quality=10)
+    # quantization must change the image but keep it bounded
+    assert not np.allclose(out, img, atol=1e-3)
+    assert np.abs(np.asarray(out)).max() < 10 * np.abs(img).max() + 1
+
+
+def test_block_unblock_inverse(rng):
+    img = rng.normal(size=(3, 24, 16))
+    assert np.allclose(J.unblock_image(J.block_image(jnp.asarray(img))), img)

@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import conv as C
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 64, 1000, 1024])
+@pytest.mark.parametrize("phi", [2, 8, 14])
+def test_asm_relu_sweep(rng, n, phi):
+    x = jnp.asarray(rng.normal(size=(n, 64)), jnp.float32)
+    a = ops.asm_relu(x, phi)
+    b = ref.asm_relu_ref(x, phi)
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_asm_relu_dtypes(rng, dtype):
+    x = jnp.asarray(rng.normal(size=(96, 64)), dtype)
+    a = ops.asm_relu(x, 14)
+    b = ref.asm_relu_ref(x, 14)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("n", [7, 256, 515])
+def test_block_dct_roundtrip_sweep(rng, n):
+    blk = jnp.asarray(rng.normal(size=(n, 8, 8)), jnp.float32)
+    co = ops.block_dct(blk)
+    np.testing.assert_allclose(co, ref.block_dct_ref(blk), atol=2e-5)
+    back = ops.block_idct(co)
+    np.testing.assert_allclose(back, blk, atol=2e-5)
+
+
+def test_block_dct_quantized(rng):
+    blk = jnp.asarray(rng.normal(size=(64, 8, 8)), jnp.float32)
+    co = ops.block_dct(blk, quality=50)
+    co_ref = ref.block_dct_ref(blk) / jnp.asarray(
+        __import__("repro.core.dct", fromlist=["dct"]).quantization_table(50),
+        jnp.float32)
+    np.testing.assert_allclose(co, co_ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("cin,cout,grid", [(1, 1, 2), (3, 5, 4), (4, 8, 2)])
+def test_jpeg_conv_sweep(rng, stride, cin, cout, grid):
+    k = jnp.asarray(rng.normal(size=(cout, cin, 3, 3)) * 0.3, jnp.float32)
+    xi = C.explode(k, stride)
+    coef = jnp.asarray(rng.normal(size=(2, grid, grid, cin, 64)), jnp.float32)
+    a = ops.jpeg_conv_apply(coef, xi, stride)
+    b = ref.jpeg_conv_ref(coef, xi, stride)
+    np.testing.assert_allclose(a, b, atol=5e-4)
+
+
+@pytest.mark.parametrize("s,t,h,kvh,hd", [
+    (128, 128, 4, 4, 32),   # MHA
+    (256, 256, 8, 2, 64),   # GQA
+    (96, 96, 4, 1, 32),     # MQA, non-tile-aligned
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_flash_attention_sweep(rng, s, t, h, kvh, hd, causal, window):
+    q = jnp.asarray(rng.normal(size=(2, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, t, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, t, kvh, hd)), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=causal, window=window)
+    b = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(a, b, atol=2e-4)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.bfloat16)
+    a = ops.flash_attention(q, k, v, causal=True)
+    b = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=5e-2)
+
+
+def test_kernel_matches_model_attention(rng):
+    """Pallas flash == the pure-JAX chunked attention used by the models."""
+    import repro.models.layers as L
+    q = jnp.asarray(rng.normal(size=(2, 256, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 256, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 256, 2, 32)), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True)
+    b = L.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(a, b, atol=2e-4)

@@ -1,0 +1,86 @@
+"""Sharding-rule inference (pure logic — no devices required)."""
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig, get_config
+from repro.parallel.sharding import (
+    AxisRules, batch_pspec, cache_pspec, param_pspec, sharding_rules,
+    zero1_pspec,
+)
+
+
+def _rules(multi=False):
+    return AxisRules.default(multi)
+
+
+def test_param_pspec_dense():
+    cfg = get_config("mistral-nemo-12b")
+    with sharding_rules(_rules()):
+        # stacked (periods, d, q_dim) input-side projection -> last dim
+        assert param_pspec("blocks/pos0/attn/q_proj", (40, 5120, 4096), cfg) \
+            == P(None, None, "model")
+        # output-side projection -> contraction dim
+        assert param_pspec("blocks/pos0/attn/o_proj", (40, 4096, 5120), cfg) \
+            == P(None, "model", None)
+        # embedding -> vocab dim
+        assert param_pspec("embed", (131072, 5120), cfg) == P("model", None)
+        # norms replicate
+        assert param_pspec("blocks/pos0/ln1", (40, 5120), cfg) == P(None, None)
+        assert param_pspec("ln_f", (5120,), cfg) == P(None)
+
+
+def test_param_pspec_moe_zero3():
+    cfg = get_config("mixtral-8x7b")
+    with sharding_rules(_rules()):
+        assert param_pspec("blocks/pos0/moe/w_gate", (32, 8, 4096, 14336),
+                           cfg) == P(None, None, "data", "model")
+        assert param_pspec("blocks/pos0/moe/w_out", (32, 8, 14336, 4096),
+                           cfg) == P(None, None, "model", "data")
+        assert param_pspec("blocks/pos0/moe/router", (32, 4096, 8), cfg) \
+            == P(None, None, None)
+
+
+def test_param_pspec_uneven_dim_replicates():
+    cfg = get_config("jpeg-resnet")
+    with sharding_rules(_rules()):
+        # head (512, 1000): 1000 not divisible by 16 -> replicate
+        assert param_pspec("head/w", (512, 1000), cfg) == P(None, None)
+
+
+def test_zero1_adds_data_axis():
+    cfg = get_config("mistral-nemo-12b")
+    rules = _rules()
+    with sharding_rules(rules):
+        base = param_pspec("blocks/pos0/attn/q_proj", (40, 5120, 4096), cfg)
+        z = zero1_pspec(base, (40, 5120, 4096), rules)
+        assert z == P(None, "data", "model")
+        # no double-sharding when data already used (ZeRO-3 experts)
+        moe = param_pspec("blocks/pos0/moe/w_gate", (32, 8, 4096, 14336),
+                          get_config("mixtral-8x7b"))
+        assert zero1_pspec(moe, (32, 8, 4096, 14336), rules) == moe
+
+
+def test_batch_pspec_divisibility():
+    rules = _rules(multi=True)
+    assert batch_pspec(rules, 256) == ("pod", "data")
+    assert batch_pspec(rules, 16) == ("pod",) or batch_pspec(rules, 16) == ("pod", )
+    assert batch_pspec(rules, 1) == ()
+    single = _rules()
+    assert batch_pspec(single, 128) == ("data",)
+    assert batch_pspec(single, 3) == ()
+
+
+def test_cache_pspec_long_context():
+    rules = _rules(multi=True)
+    baxes, seq = cache_pspec(rules, 1)
+    assert baxes == ()
+    assert set(seq) == {"pod", "data", "model"}
+    baxes, seq = cache_pspec(rules, 256)
+    assert baxes == ("pod", "data")
+    assert seq == ("model",)
+
+
+def test_shard_noop_without_rules():
+    import jax.numpy as jnp
+    from repro.parallel.sharding import shard
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", None) is x

@@ -1,0 +1,126 @@
+"""End-to-end behaviour: training drives loss down, conversion serves,
+preemption-resume is bit-consistent."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+@pytest.mark.slow
+def test_jpeg_resnet_training_learns(tmp_path):
+    """Train the paper's network end-to-end on synthetic JPEG data: the
+    loss must drop well below chance (ln 10 ≈ 2.30)."""
+    metrics = os.path.join(str(tmp_path), "m.json")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "jpeg-resnet",
+         "--reduced", "--steps", "60", "--batch", "16", "--lr", "3e-3",
+         "--ckpt-dir", os.path.join(str(tmp_path), "ck"),
+         "--ckpt-every", "0", "--log-every", "10",
+         "--metrics-out", metrics],
+        capture_output=True, text=True, env=ENV, timeout=1500)
+    assert out.returncode == 0, out.stderr[-2000:]
+    m = json.load(open(metrics))
+    losses = dict(m["losses"])
+    assert losses[max(losses)] < losses[0], m["losses"]
+    assert losses[max(losses)] < 2.2, m["losses"]
+
+
+@pytest.mark.slow
+def test_lm_training_learns(tmp_path):
+    metrics = os.path.join(str(tmp_path), "m.json")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-360m",
+         "--reduced", "--steps", "40", "--batch", "8", "--seq", "64",
+         "--lr", "2e-3", "--ckpt-dir", os.path.join(str(tmp_path), "ck"),
+         "--ckpt-every", "0", "--log-every", "10", "--metrics-out", metrics],
+        capture_output=True, text=True, env=ENV, timeout=1500)
+    assert out.returncode == 0, out.stderr[-2000:]
+    m = json.load(open(metrics))
+    losses = dict(m["losses"])
+    assert losses[max(losses)] < losses[0] - 0.3, m["losses"]
+
+
+@pytest.mark.slow
+def test_preemption_and_resume(tmp_path):
+    """SIGTERM mid-training checkpoints and exits 0; a restart resumes from
+    the saved step (fault-tolerance contract)."""
+    ck = os.path.join(str(tmp_path), "ck")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-360m",
+         "--reduced", "--steps", "4000", "--batch", "4", "--seq", "32",
+         "--ckpt-dir", ck, "--ckpt-every", "5", "--log-every", "5"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=ENV)
+    t0 = time.time()
+    seen = ""
+    while time.time() - t0 < 420:
+        line = proc.stdout.readline()
+        seen += line
+        if "step 10" in line or "step 15" in line:
+            break
+    proc.send_signal(signal.SIGTERM)
+    rc = proc.wait(timeout=300)
+    assert rc == 0, seen[-2000:]
+
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-360m",
+         "--reduced", "--steps", "1", "--batch", "4", "--seq", "32",
+         "--ckpt-dir", ck, "--log-every", "1"],
+        capture_output=True, text=True, env=ENV, timeout=600)
+    assert "resumed from step" in out.stdout, out.stdout[-1500:]
+
+
+@pytest.mark.slow
+def test_serve_smoke():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "smollm-360m",
+         "--reduced", "--batch", "2", "--requests", "4", "--max-new", "6"],
+        capture_output=True, text=True, env=ENV, timeout=900)
+    assert out.returncode == 0, out.stderr[-1500:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["completed"] == 4
+    assert result["tokens_per_s"] > 0
+
+
+def test_conversion_pipeline_end_to_end(rng):
+    """Train a spatial model briefly, convert, serve JPEG inputs — predicted
+    classes identical between domains (the paper's deployment story)."""
+    from repro.core import convert as CV
+    from repro.core import jpeg as J
+    from repro.core import resnet as R
+    from repro.data.synthetic import image_batch
+
+    spec = R.ResNetSpec(widths=(8, 12, 16), num_classes=4)
+    params, state = R.init_resnet(jax.random.PRNGKey(0), spec)
+    data = image_batch(0, 0, 24, 32, 3, 4)
+    x, y = jnp.asarray(data["images"]), jnp.asarray(data["labels"])
+
+    @jax.jit
+    def step(params, state):
+        def loss_fn(p):
+            logits, st = R.spatial_apply(p, state, x, training=True, spec=spec)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1)), st
+        (l, st), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+        return params, st, l
+
+    for _ in range(5):
+        params, state, l = step(params, state)
+
+    model, dev = CV.convert_and_verify(params, state, spec, x[:8])
+    assert dev < 1e-3
+    coef = jnp.moveaxis(J.jpeg_encode(x, quality=spec.quality, scaled=True), 1, 3)
+    pred_jpeg = jnp.argmax(model(coef), -1)
+    logits_sp, _ = R.spatial_apply(params, state, x, training=False, spec=spec)
+    pred_sp = jnp.argmax(logits_sp, -1)
+    assert bool(jnp.all(pred_jpeg == pred_sp))

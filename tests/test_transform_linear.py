@@ -1,0 +1,79 @@
+"""Generalised transform-domain folding (beyond-paper, VLM/audio frontends)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct as D
+from repro.core import jpeg as J
+from repro.core.transform_linear import (
+    fold_frontend, fold_patch_embed, unfold_patches_to_blocks,
+)
+
+
+def test_fold_patch_embed_exact(rng):
+    """ViT patch embedding over JPEG coefficients == over pixels (exact)."""
+    patch, channels, d = 16, 3, 32
+    imgs = jnp.asarray(rng.normal(size=(2, channels, 32, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(channels * patch * patch, d)) * 0.05,
+                    jnp.float32)
+    # pixel-domain embeddings
+    patches = unfold_patches_to_blocks(imgs, patch)  # (N, P, C*16*16)
+    ref = patches @ w
+    # JPEG-domain: encode per patch into (C, 2, 2, 64) coefficient layout
+    coef = J.jpeg_encode(imgs, scaled=True)  # (N, C, 4, 4, 64)
+    n = imgs.shape[0]
+    g = 32 // patch
+    pb = patch // 8
+    cc = coef.reshape(n, channels, g, pb, g, pb, 64)
+    cc = jnp.moveaxis(cc, 4, 3)  # (n, C, g, g, pb, pb, 64)
+    cc = jnp.moveaxis(cc, 1, 3)  # (n, g, g, C, pb, pb, 64)
+    flat = cc.reshape(n, g * g, channels * pb * pb * 64)
+    w_jpeg = fold_patch_embed(w, patch, channels, scaled=True)
+    out = flat @ w_jpeg
+    np.testing.assert_allclose(out, ref, atol=1e-3)
+
+
+def test_fold_frontend_orthonormal(rng):
+    """Folding an orthonormal analysis map into a following linear layer."""
+    a = np.linalg.qr(rng.normal(size=(64, 64)))[0]
+    w = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(5, 64)), jnp.float32)
+    coeffs = x @ jnp.asarray(a, jnp.float32).T  # analysis
+    folded = fold_frontend(jnp.asarray(a, jnp.float32), w)
+    np.testing.assert_allclose(coeffs @ folded, x @ w, atol=1e-4)
+
+
+def test_vlm_jpeg_patch_embed_integration(rng):
+    """The internvl2 tower consumes JPEG-domain patch embeddings losslessly:
+    fold the (random) patch projection, feed coefficient-embedded vision
+    tokens, compare with the pixel path."""
+    from repro.configs.base import reduced_config
+    from repro.models import build_model
+
+    cfg = reduced_config("internvl2-1b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    patch, channels = 16, 3
+    n_patch = cfg.vision_prefix_len
+    side = int(np.sqrt(n_patch)) * patch
+    imgs = jnp.asarray(rng.normal(size=(2, channels, side, side)) * 0.3,
+                       jnp.float32)
+    w = jnp.asarray(rng.normal(size=(channels * patch * patch, cfg.d_model))
+                    * 0.02, jnp.float32)
+    pixel_embeds = unfold_patches_to_blocks(imgs, patch) @ w
+
+    coef = J.jpeg_encode(imgs, scaled=True)
+    g = side // patch
+    pb = patch // 8
+    cc = coef.reshape(2, channels, g, pb, g, pb, 64)
+    cc = jnp.moveaxis(cc, 4, 3)
+    cc = jnp.moveaxis(cc, 1, 3)
+    flat = cc.reshape(2, g * g, channels * pb * pb * 64)
+    jpeg_embeds = flat @ fold_patch_embed(w, patch, channels, scaled=True)
+
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab_size)
+    out_px, _ = model.forward(params, {"tokens": toks,
+                                       "vision_embeds": pixel_embeds})
+    out_jp, _ = model.forward(params, {"tokens": toks,
+                                       "vision_embeds": jpeg_embeds})
+    np.testing.assert_allclose(out_px, out_jp, atol=1e-3)
