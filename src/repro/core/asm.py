@@ -33,6 +33,7 @@ from typing import NamedTuple, Sequence
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import conv as convlib
 from repro.core import dct as dctlib
 
 __all__ = [
@@ -67,12 +68,18 @@ class AsmConstants(NamedTuple):
     recon_t: np.ndarray    # (64, 64) forward DCT back to zigzag coefficients
 
 
-def asm_constants(phi: int, qtable: np.ndarray | None = None) -> AsmConstants:
+def asm_constants(phi: int, qtable: np.ndarray | None = None,
+                  bands: int = dctlib.NFREQ) -> AsmConstants:
     """Build ASM constants; folds quantization scaling if ``qtable`` given.
 
     With a qtable (JPEG-scaled convention, Eq. 20): de-quantization is folded
     into both reconstruction matrices and re-quantization into the forward
     matrix, so callers never touch the tables at runtime.
+
+    ``bands`` (paper §6 sparsity) keeps only the first ``bands`` zigzag
+    coefficients: the reconstruction matrices become ``(bands, 64)`` and the
+    forward matrix ``(64, bands)``, so truncated activations multiply
+    ``bands``-wide operands instead of zero-padded 64-wide ones.
     """
     recon = dctlib.reconstruction_matrix().copy()
     recon_phi = dctlib.truncated_reconstruction_matrix(phi).copy()
@@ -82,6 +89,10 @@ def asm_constants(phi: int, qtable: np.ndarray | None = None) -> AsmConstants:
         recon = q[:, None] * recon
         recon_phi = q[:, None] * recon_phi
         recon_t = recon_t / q[None, :]
+    if bands < dctlib.NFREQ:
+        recon = recon[:bands]
+        recon_phi = recon_phi[:bands]
+        recon_t = recon_t[:, :bands]
     return AsmConstants(recon_phi, recon, recon_t)
 
 
@@ -97,16 +108,26 @@ def nonnegative_mask(coef: jnp.ndarray, phi: int) -> jnp.ndarray:
 
 
 def asm_relu(
-    coef: jnp.ndarray, phi: int = EXACT_PHI, qtable: np.ndarray | None = None
+    coef: jnp.ndarray, phi: int = EXACT_PHI, qtable: np.ndarray | None = None,
+    bands: int = dctlib.NFREQ,
 ) -> jnp.ndarray:
-    """ASM ReLU on ``(..., 64)`` zigzag coefficient tensors (Algorithm 2)."""
-    c = asm_constants(phi, qtable)
+    """ASM ReLU on ``(..., 64)`` zigzag coefficient tensors (Algorithm 2).
+
+    With ``bands < 64`` the input is sliced to the kept coefficients before
+    the three matmuls (dropped, not multiplied by zero) and the output is
+    zero-padded back to the caller's width.
+    """
+    nf = coef.shape[-1]
+    c = asm_constants(phi, qtable, bands=min(bands, nf))
+    if bands < nf:
+        coef = coef[..., :bands]
     recon_phi = jnp.asarray(c.recon_phi, coef.dtype)
     recon = jnp.asarray(c.recon, coef.dtype)
     recon_t = jnp.asarray(c.recon_t, coef.dtype)
     mask = (coef @ recon_phi) > 0
     spatial = coef @ recon
-    return jnp.where(mask, spatial, jnp.zeros_like(spatial)) @ recon_t
+    out = jnp.where(mask, spatial, jnp.zeros_like(spatial)) @ recon_t
+    return convlib.pad_bands(out, nf)
 
 
 def apx_relu(

@@ -46,6 +46,9 @@ __all__ = [
     "explosion_basis",
     "explode",
     "apply_exploded",
+    "pad_bands",
+    "operator_elems",
+    "add_dc_bias",
     "jpeg_conv",
     "explode_full",
     "apply_full",
@@ -96,14 +99,23 @@ def explosion_basis(
     quality: int = 50,
     in_scaled: bool = False,
     out_scaled: bool = False,
+    bands: int = dctlib.NFREQ,
 ) -> np.ndarray:
-    """2-D explosion basis ``(r, r, ndy, ndx, 64, 64)`` in zigzag order.
+    """2-D explosion basis ``(r, r, ndy, ndx, bands, bands)`` in zigzag order.
 
     ``in_scaled`` folds the de-quantization diagonal S̃ on the input side;
     ``out_scaled`` folds the re-quantization diagonal S on the output side
     (paper Eq. 20).  Both ``False`` is the orthonormal-DCT internal
     convention (quantization already folded into the first layer).
+
+    ``bands`` (paper §6 sparsity) keeps only the first ``bands`` zigzag
+    coefficients on *both* sides of the operator: high-frequency inputs are
+    never read and high-frequency outputs never computed, so the downstream
+    matmuls shrink by ``(bands/64)²`` instead of multiplying zeros.
+    ``bands=64`` is exact.
     """
+    if not 1 <= bands <= dctlib.NFREQ:
+        raise ValueError(f"bands must be in [1, {dctlib.NFREQ}], got {bands}")
     b1 = _basis_1d(stride, r)
     b = dctlib.BLOCK
     # (u, v, dy, dx, a, a', c, c') -> zigzag (k = (a,c) in, k' = (a',c') out)
@@ -112,11 +124,12 @@ def explosion_basis(
     full = full.reshape(r_, r_, nd, nd, b * b, b * b)
     zz = dctlib.zigzag_permutation()
     full = full[..., zz, :][..., zz]
+    full = full[..., :bands, :bands]
     q = dctlib.quantization_table(quality)
     if in_scaled:
-        full = full * q[:, None]
+        full = full * q[:bands, None]
     if out_scaled:
-        full = full / q[None, :]
+        full = full / q[None, :bands]
     return np.ascontiguousarray(full)
 
 
@@ -127,8 +140,9 @@ def explode(
     quality: int = 50,
     in_scaled: bool = False,
     out_scaled: bool = False,
+    bands: int = dctlib.NFREQ,
 ) -> jnp.ndarray:
-    """Exploded JPEG-domain operator ``(ndy, ndx, Cin, 64, Cout, 64)``.
+    """Exploded JPEG-domain operator ``(ndy, ndx, Cin, bands, Cout, bands)``.
 
     Linear in ``kernel`` (Cout, Cin, r, r) — differentiable for JPEG-domain
     training (the paper's "more complex gradient" is just this einsum's
@@ -136,20 +150,57 @@ def explode(
     """
     r = kernel.shape[-1]
     basis = jnp.asarray(
-        explosion_basis(stride, r, quality, in_scaled, out_scaled), kernel.dtype
+        explosion_basis(stride, r, quality, in_scaled, out_scaled, bands),
+        kernel.dtype,
     )
     return jnp.einsum("oiuv,uvyxkl->yxikol", kernel, basis)
 
 
+def pad_bands(coef: jnp.ndarray, nf: int = dctlib.NFREQ) -> jnp.ndarray:
+    """Zero-pad the trailing coefficient axis back up to ``nf`` entries."""
+    have = coef.shape[-1]
+    if have == nf:
+        return coef
+    pad = [(0, 0)] * (coef.ndim - 1) + [(0, nf - have)]
+    return jnp.pad(coef, pad)
+
+
+def operator_elems(kernel_shape, stride: int, bands: int = dctlib.NFREQ) -> int:
+    """Element count of the materialised Ξ for a (Cout, Cin, r, r) kernel —
+    the quantity compared against ``MATERIALIZE_LIMIT``."""
+    cout, cin, r = kernel_shape[0], kernel_shape[1], kernel_shape[-1]
+    d_min, d_max = block_offsets(stride, r)
+    nd = d_max - d_min + 1
+    return nd * nd * cin * cout * bands * bands
+
+
+def add_dc_bias(out: jnp.ndarray, bias: jnp.ndarray | None,
+                out_scaled: bool = False) -> jnp.ndarray:
+    """Per-channel bias ``b`` adds a constant to every pixel, i.e. ``8·b``
+    on the orthonormal DC coefficient (``b`` directly when re-quantization
+    with q₀ = 8 is folded on the output side)."""
+    if bias is None:
+        return out
+    dc_gain = 1.0 if out_scaled else float(dctlib.BLOCK)
+    return out.at[..., 0].add(dc_gain * bias)
+
+
 def apply_exploded(coef: jnp.ndarray, xi: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
-    """Apply an exploded operator to ``(N, bh, bw, Cin, 64)`` coefficients.
+    """Apply an exploded operator to ``(N, bh, bw, Cin, ≥bands)`` coefficients.
 
     ``out[n, x', y', o, k'] = Σ_{dy,dx,i,k} coef[n, s·x'+dy, s·y'+dx, i, k]
     · xi[dy, dx, i, k, o, k']`` with zero padding outside the block grid —
     exactly the border behaviour of SAME zero-padded spatial convolution.
+
+    If ``xi`` was built with ``bands < 64`` the input is sliced to the kept
+    coefficients before the matmuls and the output has ``bands`` trailing
+    entries (use :func:`pad_bands` to restore the 64-wide layout).
     """
-    n, bh, bw, cin, nf = coef.shape
     ndy, ndx = xi.shape[0], xi.shape[1]
+    nf_in = xi.shape[3]
+    if coef.shape[-1] > nf_in:
+        coef = coef[..., :nf_in]
+    n, bh, bw, cin, nf = coef.shape
     d_min_y, _ = _offsets_from(ndy, stride)
     d_min_x, _ = _offsets_from(ndx, stride)
     bh_out, bw_out = bh // stride, bw // stride
@@ -210,6 +261,7 @@ def jpeg_conv(
     in_scaled: bool = False,
     out_scaled: bool = False,
     quality: int = 50,
+    bands: int = dctlib.NFREQ,
 ) -> jnp.ndarray:
     """JPEG-domain convolution: explode + apply, or factored for wide nets.
 
@@ -227,34 +279,37 @@ def jpeg_conv(
     ``8·b`` to the orthonormal DC coefficient (``b`` directly in the scaled
     convention with q₀ = 8).
     """
-    cout, cin, r, _ = kernel.shape
-    d_min, d_max = block_offsets(stride, r)
-    nd = d_max - d_min + 1
-    op_elems = nd * nd * cin * cout * 64 * 64
-    if op_elems <= MATERIALIZE_LIMIT:
+    if operator_elems(kernel.shape, stride, bands) <= MATERIALIZE_LIMIT:
         xi = explode(kernel, stride, quality=quality, in_scaled=in_scaled,
-                     out_scaled=out_scaled)
-        out = apply_exploded(coef, xi, stride)
+                     out_scaled=out_scaled, bands=bands)
+        out = pad_bands(apply_exploded(coef, xi, stride))
     else:
         out = _jpeg_conv_factored(coef, kernel, stride, quality=quality,
-                                  in_scaled=in_scaled, out_scaled=out_scaled)
-    if bias is not None:
-        dc_gain = 1.0 if out_scaled else float(dctlib.BLOCK)
-        out = out.at[..., 0].add(dc_gain * bias)
-    return out
+                                  in_scaled=in_scaled, out_scaled=out_scaled,
+                                  bands=bands)
+    return add_dc_bias(out, bias, out_scaled)
 
 
 def _jpeg_conv_factored(coef, kernel, stride, *, quality, in_scaled,
-                        out_scaled):
+                        out_scaled, bands=dctlib.NFREQ):
     """Ξ = J ∘ C ∘ J̃ applied as its factors (exact, never forms Ξ).
 
     coef: (N, bh, bw, Cin, 64) -> (N, bh/s, bw/s, Cout, 64).
+
+    ``bands`` truncates the input and output coefficient sets so the result
+    matches the band-truncated materialised operator (here the truncation
+    is a zeroing — this path's win is memory, not the §6 sparsity FLOPs).
     """
+    if bands < coef.shape[-1]:
+        coef = pad_bands(coef[..., :bands])
     img = jpeglib.jpeg_decode(jnp.moveaxis(coef, 3, 1), scaled=in_scaled,
                               quality=quality)
     out = spatial_conv(img, kernel, stride)
     enc = jpeglib.jpeg_encode(out, scaled=out_scaled, quality=quality)
-    return jnp.moveaxis(enc, 1, 3)
+    enc = jnp.moveaxis(enc, 1, 3)
+    if bands < enc.shape[-1]:
+        enc = pad_bands(enc[..., :bands])
+    return enc
 
 
 # --------------------------------------------------------------------------

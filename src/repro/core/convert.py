@@ -29,19 +29,30 @@ class ConvertedModel(NamedTuple):
     operators: Any
     spec: resnetlib.ResNetSpec
     phi: int
+    dispatch: Any = None  # DispatchConfig resolved at convert time
 
     def __call__(self, coef: jnp.ndarray) -> jnp.ndarray:
         return resnetlib.jpeg_apply_precomputed(
             self.params, self.state, self.operators, coef,
-            spec=self.spec, phi=self.phi,
+            spec=self.spec, phi=self.phi, dispatch=self.dispatch,
         )
 
 
 def convert(params, state, spec: resnetlib.ResNetSpec,
-            phi: int = asmlib.EXACT_PHI) -> ConvertedModel:
-    """Convert a (trained) spatial model for JPEG-domain inference."""
-    ops = resnetlib.precompute_operators(params, spec)
-    return ConvertedModel(params, state, ops, spec, phi)
+            phi: int = asmlib.EXACT_PHI,
+            dispatch=None) -> ConvertedModel:
+    """Convert a (trained) spatial model for JPEG-domain inference.
+
+    ``dispatch``: a ``core.dispatch.DispatchConfig`` resolving the apply
+    path and band truncation of every precomputed operator (None = the
+    global config *frozen here*, so later env/config changes cannot skew
+    an already-converted model's ASM/batchnorm away from its operators).
+    """
+    from repro.core import dispatch as dispatchlib
+
+    cfg = dispatchlib.resolve_config(dispatch)
+    ops = resnetlib.precompute_operators(params, spec, dispatch=cfg)
+    return ConvertedModel(params, state, ops, spec, phi, cfg)
 
 
 def convert_and_verify(

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core import asm as asmlib
 from repro.core import batchnorm as bnlib
 from repro.core import conv as convlib
+from repro.core import dispatch as dispatchlib
 from repro.core import jpeg as jpeglib
 from repro.core import pooling as poollib
 from repro.parallel.sharding import shard
@@ -142,7 +143,8 @@ def spatial_apply(params, state, x, *, training: bool, spec: ResNetSpec):
 
 
 def jpeg_apply(params, state, coef, *, training: bool, spec: ResNetSpec,
-               phi: int | None = None, remat: bool = False):
+               phi: int | None = None, remat: bool = False,
+               dispatch: dispatchlib.DispatchConfig | None = None):
     """``coef``: (N, bh, bw, C, 64) step-4 JPEG coefficients -> logits.
 
     Input coefficients are quantization-scaled (true JPEG); the stem conv
@@ -151,14 +153,18 @@ def jpeg_apply(params, state, coef, *, training: bool, spec: ResNetSpec,
 
     ``remat``: checkpoint each residual block (recompute the ASM/conv
     intermediates in backward — they are several× the activation size).
+
+    ``dispatch``: per-op backend/band policy (None = the global config,
+    see ``core.dispatch``).  Resolved at trace time.
     """
     phi = spec.phi if phi is None else phi
+    cfg = dispatchlib.resolve_config(dispatch)
     new_state = {}
 
     def bn_apply(pdict, sdict, h):
         p = bnlib.BatchNormParams(pdict["gamma"], pdict["beta"])
         s = bnlib.BatchNormState(sdict["mean"], sdict["var"])
-        return bnlib.batchnorm_jpeg(h, p, s, training=training)
+        return dispatchlib.batchnorm(h, p, s, training=training, cfg=cfg)
 
     def bn(name, h):
         h, s2 = bn_apply(params[name], state[name], h)
@@ -166,10 +172,10 @@ def jpeg_apply(params, state, coef, *, training: bool, spec: ResNetSpec,
         return h
 
     def relu(h):
-        return asmlib.asm_relu(h, phi)
+        return dispatchlib.asm_relu(h, phi, cfg=cfg)
 
-    h = convlib.jpeg_conv(coef, params["stem"]["kernel"], 1,
-                          in_scaled=True, quality=spec.quality)
+    h = dispatchlib.conv(coef, params["stem"]["kernel"], 1,
+                         in_scaled=True, quality=spec.quality, cfg=cfg)
     h = relu(bn("stem_bn", h))
     h = shard(h, "batch", None, None, None, None)
     for name, s, cin, w in _stages(spec):
@@ -177,11 +183,11 @@ def jpeg_apply(params, state, coef, *, training: bool, spec: ResNetSpec,
         def block_fn(h, blk, bn1p, bn1s, bn2p, bn2s):
             short = h
             if "proj" in blk:
-                short = convlib.jpeg_conv(h, blk["proj"], s)
-            h = convlib.jpeg_conv(h, blk["conv1"], s)
+                short = dispatchlib.conv(h, blk["proj"], s, cfg=cfg)
+            h = dispatchlib.conv(h, blk["conv1"], s, cfg=cfg)
             h1, st1 = bn_apply(bn1p, bn1s, h)
             h = relu(h1)
-            h = convlib.jpeg_conv(h, blk["conv2"], 1)
+            h = dispatchlib.conv(h, blk["conv2"], 1, cfg=cfg)
             h2, st2 = bn_apply(bn2p, bn2s, h)
             h = relu(poollib.residual_add(h2, short))
             h = shard(h, "batch", None, None, None, None)
@@ -204,44 +210,57 @@ def jpeg_apply(params, state, coef, *, training: bool, spec: ResNetSpec,
 # --------------------------------------------------------------------------
 
 
-def precompute_operators(params, spec: ResNetSpec):
-    """Explode every convolution once; returns an operator pytree."""
-    ops = {"stem": convlib.explode(params["stem"]["kernel"], 1,
-                                   in_scaled=True, quality=spec.quality)}
+def precompute_operators(params, spec: ResNetSpec,
+                         dispatch: dispatchlib.DispatchConfig | None = None):
+    """Explode every convolution once; returns an operator pytree.
+
+    Each leaf is a :class:`repro.core.dispatch.ConvOperator` whose apply
+    path (reference / pallas / factored) and band truncation were resolved
+    at precompute time from ``dispatch`` (None = global config).
+    """
+    cfg = dispatchlib.resolve_config(dispatch)
+    pc = dispatchlib.precompute_conv
+    ops = {"stem": pc(params["stem"]["kernel"], 1, in_scaled=True,
+                      quality=spec.quality, cfg=cfg)}
     for name, s, cin, w in _stages(spec):
         blk = params[name]
         entry = {
-            "conv1": convlib.explode(blk["conv1"], s),
-            "conv2": convlib.explode(blk["conv2"], 1),
+            "conv1": pc(blk["conv1"], s, cfg=cfg),
+            "conv2": pc(blk["conv2"], 1, cfg=cfg),
         }
         if "proj" in blk:
-            entry["proj"] = convlib.explode(blk["proj"], s)
+            entry["proj"] = pc(blk["proj"], s, cfg=cfg)
         ops[name] = entry
     return ops
 
 
 def jpeg_apply_precomputed(params, state, ops, coef, *, spec: ResNetSpec,
-                           phi: int | None = None):
+                           phi: int | None = None,
+                           dispatch: dispatchlib.DispatchConfig | None = None):
     """Inference-only apply using precomputed exploded operators."""
     phi = spec.phi if phi is None else phi
+    cfg = dispatchlib.resolve_config(dispatch)
 
     def bn(name, h):
         p = bnlib.BatchNormParams(params[name]["gamma"], params[name]["beta"])
         s = bnlib.BatchNormState(state[name]["mean"], state[name]["var"])
-        h, _ = bnlib.batchnorm_jpeg(h, p, s, training=False)
+        h, _ = dispatchlib.batchnorm(h, p, s, training=False, cfg=cfg)
         return h
 
-    h = convlib.apply_exploded(coef, ops["stem"], 1)
-    h = asmlib.asm_relu(bn("stem_bn", h), phi)
+    def relu(h):
+        return dispatchlib.asm_relu(h, phi, cfg=cfg)
+
+    h = dispatchlib.apply_conv(coef, ops["stem"], cfg=cfg)
+    h = relu(bn("stem_bn", h))
     for name, s, cin, w in _stages(spec):
         blk, op = params[name], ops[name]
         short = h
         if "proj" in blk:
-            short = convlib.apply_exploded(h, op["proj"], s)
-        h = convlib.apply_exploded(h, op["conv1"], s)
-        h = asmlib.asm_relu(bn(name + "_bn1", h), phi)
-        h = convlib.apply_exploded(h, op["conv2"], 1)
+            short = dispatchlib.apply_conv(h, op["proj"], cfg=cfg)
+        h = dispatchlib.apply_conv(h, op["conv1"], cfg=cfg)
+        h = relu(bn(name + "_bn1", h))
+        h = dispatchlib.apply_conv(h, op["conv2"], cfg=cfg)
         h = bn(name + "_bn2", h)
-        h = asmlib.asm_relu(h + short, phi)
+        h = relu(h + short)
     pooled = poollib.global_avg_pool_jpeg(h)
     return pooled @ params["head"]["w"] + params["head"]["b"]

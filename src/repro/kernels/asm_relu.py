@@ -42,30 +42,32 @@ def _asm_relu_kernel(coef_ref, recon_phi_ref, recon_ref, recon_t_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("phi", "interpret"))
 def asm_relu_pallas(coef: jnp.ndarray, phi: int = 14, *,
                     interpret: bool = True) -> jnp.ndarray:
-    """ASM ReLU over ``(N, 64)`` zigzag coefficients (orthonormal units).
+    """ASM ReLU over ``(N, nf)`` zigzag coefficients (orthonormal units).
 
-    ``interpret=True`` runs the kernel body on CPU for validation; on TPU
-    pass ``interpret=False``.
+    ``nf`` may be < 64 for band-truncated activations (paper §6 sparsity):
+    the reconstruction operands shrink to ``(nf, 64)`` / ``(64, nf)`` so the
+    dropped coefficients never enter the MXU.  ``interpret=True`` runs the
+    kernel body on CPU for validation; on TPU pass ``interpret=False``.
     """
-    n = coef.shape[0]
+    n, nf = coef.shape
     tile = min(TILE_BLOCKS, n)
     if n % tile:
         pad = tile - n % tile
         coef = jnp.pad(coef, ((0, pad), (0, 0)))
     grid = (coef.shape[0] // tile,)
-    recon = jnp.asarray(dctlib.reconstruction_matrix(), coef.dtype)
-    recon_phi = jnp.asarray(dctlib.truncated_reconstruction_matrix(phi),
+    recon = jnp.asarray(dctlib.reconstruction_matrix()[:nf], coef.dtype)
+    recon_phi = jnp.asarray(dctlib.truncated_reconstruction_matrix(phi)[:nf],
                             coef.dtype)
     out = pl.pallas_call(
         _asm_relu_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((tile, 64), lambda i: (i, 0)),
-            pl.BlockSpec((64, 64), lambda i: (0, 0)),
-            pl.BlockSpec((64, 64), lambda i: (0, 0)),
-            pl.BlockSpec((64, 64), lambda i: (0, 0)),
+            pl.BlockSpec((tile, nf), lambda i: (i, 0)),
+            pl.BlockSpec((nf, 64), lambda i: (0, 0)),
+            pl.BlockSpec((nf, 64), lambda i: (0, 0)),
+            pl.BlockSpec((64, nf), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((tile, 64), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile, nf), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(coef.shape, coef.dtype),
         interpret=interpret,
     )(coef, recon_phi, recon, recon.T)

@@ -59,25 +59,28 @@ def jpeg_conv_pallas(coef: jnp.ndarray, xi: jnp.ndarray, stride: int = 1, *,
                      interpret: bool = True) -> jnp.ndarray:
     """Apply an exploded operator.
 
-    ``coef``: (N, bh, bw, Cin, 64); ``xi``: (ndy, ndx, Cin, 64, Cout, 64).
-    Returns (N, bh/stride, bw/stride, Cout, 64).  Matches
-    ``core.conv.apply_exploded`` exactly (tests sweep shapes).
+    ``coef``: (N, bh, bw, Cin, nf); ``xi``: (ndy, ndx, Cin, nf, Cout, nf').
+    Returns (N, bh/stride, bw/stride, Cout, nf').  Matches
+    ``core.conv.apply_exploded`` exactly (tests sweep shapes); band-truncated
+    operators (``nf = nf' = bands < 64``) shrink the matmuls accordingly.
     """
-    n, bh, bw, cin, _ = coef.shape
     ndy, ndx = xi.shape[0], xi.shape[1]
-    cout = xi.shape[4]
+    nf_in, cout, nf_out = xi.shape[3], xi.shape[4], xi.shape[5]
+    if coef.shape[-1] > nf_in:
+        coef = coef[..., :nf_in]
+    n, bh, bw, cin, _ = coef.shape
     d_min_y, _ = _offsets_from(ndy, stride)
     d_min_x, _ = _offsets_from(ndx, stride)
     bh_out, bw_out = bh // stride, bw // stride
 
-    x = coef.reshape(n, bh, bw, cin * 64)
+    x = coef.reshape(n, bh, bw, cin * nf_in)
     pad_lo_y, pad_hi_y = -d_min_y, ndy - 1 + d_min_y
     pad_lo_x, pad_hi_x = -d_min_x, ndx - 1 + d_min_x
     x = jnp.pad(x, ((0, 0), (pad_lo_y, pad_hi_y), (pad_lo_x, pad_hi_x),
                     (0, 0)))
-    w = xi.reshape(ndy, ndx, cin * 64, cout * 64)
+    w = xi.reshape(ndy, ndx, cin * nf_in, cout * nf_out)
 
-    ci_full, co_full = cin * 64, cout * 64
+    ci_full, co_full = cin * nf_in, cout * nf_out
     tci = min(CH_TILE, ci_full)
     tco = min(CH_TILE, co_full)
     if ci_full % tci:
@@ -114,5 +117,5 @@ def jpeg_conv_pallas(coef: jnp.ndarray, xi: jnp.ndarray, stride: int = 1, *,
                                        coef.dtype),
         interpret=interpret,
     )(*([x] * ndy + [w] * ndy))
-    out = out[..., : cout * 64]
-    return out.reshape(n, bh_out, bw_out, cout, 64)
+    out = out[..., : cout * nf_out]
+    return out.reshape(n, bh_out, bw_out, cout, nf_out)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.conv import pad_bands
 from repro.kernels.asm_relu import asm_relu_pallas
 from repro.kernels.block_dct import block_dct_pallas, block_idct_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -22,12 +23,19 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def asm_relu(coef: jnp.ndarray, phi: int = 14) -> jnp.ndarray:
-    """ASM ReLU over (..., 64) coefficient tensors (orthonormal units)."""
-    lead = coef.shape[:-1]
-    flat = coef.reshape(-1, 64)
+def asm_relu(coef: jnp.ndarray, phi: int = 14,
+             bands: int | None = None) -> jnp.ndarray:
+    """ASM ReLU over (..., 64) coefficient tensors (orthonormal units).
+
+    ``bands`` slices the input to the kept zigzag coefficients before the
+    kernel's matmuls and zero-pads the result back to the caller's width.
+    """
+    lead, nf = coef.shape[:-1], coef.shape[-1]
+    flat = coef.reshape(-1, nf)
+    if bands is not None and bands < nf:
+        flat = flat[:, :bands]
     out = asm_relu_pallas(flat, phi, interpret=interpret_default())
-    return out.reshape(*lead, 64)
+    return pad_bands(out, nf).reshape(*lead, nf)
 
 
 def block_dct(blocks: jnp.ndarray, quality: int | None = None) -> jnp.ndarray:

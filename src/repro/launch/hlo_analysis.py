@@ -188,13 +188,33 @@ def _split_computations(hlo: str) -> dict[str, list[_Op]]:
     return comps
 
 
+_OPERAND_RE = re.compile(
+    r"(?:([a-z0-9]+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%([\w.\-]+)")
+
+
+def _operands(op_rest: str, shapes: dict[str, str]) -> list[tuple[str, str]]:
+    """(name, type_str) per operand of an op line.
+
+    Older XLA text prints operand types inline (``dot(f32[32,128]{1,0}
+    %param, ...)``) — those win; otherwise the type comes from the
+    name -> type table built while walking the computation.
+    """
+    head = op_rest.split(")")[0]
+    return [(name, typ or shapes.get(name, ""))
+            for typ, name in _OPERAND_RE.findall(head)]
+
+
 def _dot_flops(op: _Op, shapes: dict[str, str]) -> float:
     out_elems = _shape_elems(op.type_str)
-    lhs_name = re.match(r"\s*%?([\w.\-]+)", op.rest)
+    operands = _operands(op.rest, shapes)
     contracting = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
-    if not lhs_name or not contracting:
-        return 2.0 * out_elems  # degenerate
-    lhs_dims = _first_shape_dims(shapes.get(lhs_name.group(1), ""))
+    if not operands or not contracting:
+        lhs_name = re.match(r"\s*%?([\w.\-]+)", op.rest)
+        if not lhs_name or not contracting:
+            return 2.0 * out_elems  # degenerate
+        lhs_dims = _first_shape_dims(shapes.get(lhs_name.group(1), ""))
+    else:
+        lhs_dims = _first_shape_dims(operands[0][1])
     k = 1
     for i in contracting.group(1).split(","):
         if i and int(i) < len(lhs_dims):
@@ -204,11 +224,11 @@ def _dot_flops(op: _Op, shapes: dict[str, str]) -> float:
 
 def _conv_flops(op: _Op, shapes: dict[str, str]) -> float:
     out_elems = _shape_elems(op.type_str)
-    names = re.findall(r"%?([\w.\-]+)", op.rest)
+    operands = _operands(op.rest, shapes)
     dl = re.search(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)", op.rest)
-    if len(names) < 2 or not dl:
+    if len(operands) < 2 or not dl:
         return 2.0 * out_elems
-    kshape = _first_shape_dims(shapes.get(names[1], ""))
+    kshape = _first_shape_dims(operands[1][1])
     klabels = dl.group(2)
     o_pos = klabels.find("o")
     if o_pos < 0 or o_pos >= len(kshape):

@@ -5,9 +5,8 @@ jax device state (the dry-run sets ``XLA_FLAGS`` before any jax init).
 """
 from __future__ import annotations
 
-import jax
-
 from repro.configs.base import MeshConfig
+from repro.parallel.compat import make_mesh
 from repro.parallel.sharding import AxisRules
 
 __all__ = ["make_production_mesh", "make_mesh_from_config", "make_axis_rules",
@@ -22,9 +21,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_config(cfg: MeshConfig):
@@ -32,9 +29,7 @@ def make_mesh_from_config(cfg: MeshConfig):
         shape, axes = (cfg.pods, cfg.data, cfg.model), ("pod", "data", "model")
     else:
         shape, axes = (cfg.data, cfg.model), ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_axis_rules(cfg: MeshConfig) -> AxisRules:
@@ -46,9 +41,5 @@ def make_axis_rules(cfg: MeshConfig) -> AxisRules:
 def make_test_mesh(data: int = 2, model: int = 2, pods: int = 0):
     """Small mesh for CPU sharding tests (requires forced host devices)."""
     if pods:
-        return jax.make_mesh(
-            (pods, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pods, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config, reduced_config
+from repro.core import dispatch as dispatchlib
 from repro.models.registry import build_model
 
 __all__ = ["main", "serve_lm", "serve_jpeg_resnet"]
@@ -77,6 +78,16 @@ def serve_lm(args) -> dict:
 def serve_jpeg_resnet(args) -> dict:
     from repro.data import jpeg_iterator
 
+    # The whole forward goes through core.dispatch: the flags pick the
+    # operator path (reference / pallas / factored) and the §6 band
+    # truncation before anything is traced/compiled.  Omitted flags defer
+    # to the JPEG_DISPATCH / JPEG_BANDS environment defaults.
+    changes = {}
+    if args.dispatch is not None:
+        changes["path"] = args.dispatch
+    if args.bands is not None:
+        changes["bands"] = args.bands
+    dcfg = dispatchlib.configure(**changes)
     cfg = reduced_config("jpeg-resnet") if args.reduced else get_config("jpeg-resnet")
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
@@ -95,7 +106,8 @@ def serve_jpeg_resnet(args) -> dict:
         n_imgs += args.batch
     wall = time.time() - t0
     out = {"arch": cfg.name, "images": n_imgs, "wall_s": wall,
-           "images_per_s": n_imgs / max(wall, 1e-9)}
+           "images_per_s": n_imgs / max(wall, 1e-9),
+           "dispatch": dcfg.path, "bands": dcfg.bands}
     print(json.dumps(out))
     return out
 
@@ -109,6 +121,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dispatch", default=None,
+                    choices=("auto",) + dispatchlib.PATHS,
+                    help="jpeg-resnet operator path (core.dispatch; "
+                         "default: JPEG_DISPATCH env or auto)")
+    ap.add_argument("--bands", type=int, default=None,
+                    help="zigzag coefficients kept (paper §6 sparsity; "
+                         "default: JPEG_BANDS env or 64)")
     args = ap.parse_args()
     if args.arch == "jpeg-resnet":
         serve_jpeg_resnet(args)

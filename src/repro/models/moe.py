@@ -24,7 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import batch_pspec, current_rules

@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import compat
+
 __all__ = ["psum_compressed", "hierarchical_psum", "ring_all_gather"]
 
 
@@ -30,7 +32,7 @@ def hierarchical_psum(x: jnp.ndarray, inner_axis: str, outer_axis: str
 def ring_all_gather(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Explicit ring all-gather via ppermute (collective-overlap building
     block for manual pipelines)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     perm = [(i, (i + 1) % n) for i in range(n)]
     idx = jax.lax.axis_index(axis)
     pieces = [x] * n

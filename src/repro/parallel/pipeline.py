@@ -16,7 +16,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import shard_map
 
 __all__ = ["pipelined_apply", "bubble_fraction", "stack_stage_params"]
 

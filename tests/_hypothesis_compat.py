@@ -1,0 +1,77 @@
+"""``hypothesis`` when installed, else a deterministic mini-shim.
+
+The property tests in this suite only use ``@given`` over integer
+strategies with a fixed ``@settings(max_examples=...)``.  On a bare
+interpreter (no ``hypothesis``) we substitute a seeded sampler that calls
+the test body ``max_examples`` times with deterministic draws — weaker
+than real shrinking/coverage, but the properties still execute instead of
+the whole module failing to collect.  Install ``requirements-dev.txt``
+to get the real thing.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by the suite
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            seq = list(options)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # ``@settings`` may wrap *this* wrapper (it is applied
+                # outermost), so read the attribute off ``wrapper`` at
+                # call time rather than off ``fn`` at decoration time.
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+
+            # Drawn arguments are supplied here, not by pytest: hide the
+            # original signature so pytest does not look for fixtures.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -1,0 +1,203 @@
+"""Backend-dispatch layer: path parity, auto-sizing, band truncation.
+
+The contract under test: for any operator the three registry paths —
+``reference`` (pure jnp), ``pallas`` (kernel bodies via the interpreter),
+``factored`` (J ∘ C ∘ J̃ never materialised) — produce the same numbers,
+and the ``bands`` knob is exact at 64 and degrades monotonically below.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import asm as A
+from repro.core import conv as C
+from repro.core import dispatch as DSP
+from repro.core import jpeg as J
+
+
+def _cfg(path, **kw):
+    # interpret=True so the pallas path runs the real kernel bodies through
+    # the Pallas interpreter on CPU instead of delegating to reference.
+    return DSP.DispatchConfig(path=path, interpret=True, **kw)
+
+
+def _smooth_coef(rng, n=2, c=3, hw=16):
+    """Box-upscaled random images: JPEG-like low-frequency energy."""
+    small = rng.uniform(-1, 1, size=(n, c, hw // 8, hw // 8))
+    x = jnp.asarray(np.kron(small, np.ones((8, 8))), jnp.float32)
+    return x, jnp.moveaxis(J.jpeg_encode(x, scaled=False), 1, 3)
+
+
+# --------------------------------------------------------------------------
+# Conv parity across the three paths
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("r", [1, 3, 5])
+def test_conv_parity_sweep(rng, stride, r):
+    k = jnp.asarray(rng.normal(size=(4, 3, r, r)) * 0.3, jnp.float32)
+    coef = jnp.asarray(rng.normal(size=(2, 4, 4, 3, 64)), jnp.float32)
+    outs = {p: DSP.conv(coef, k, stride, cfg=_cfg(p)) for p in DSP.PATHS}
+    assert outs["reference"].shape == outs["pallas"].shape == outs["factored"].shape
+    np.testing.assert_allclose(outs["reference"], outs["pallas"], atol=1e-4)
+    np.testing.assert_allclose(outs["reference"], outs["factored"], atol=1e-4)
+
+
+def test_conv_parity_wide_channels_crossing_limit(rng):
+    """A wide layer whose Ξ crosses MATERIALIZE_LIMIT: auto must go
+    factored and still match the (forced) materialised reference."""
+    k = jnp.asarray(rng.normal(size=(16, 16, 3, 3)) * 0.1, jnp.float32)
+    coef = jnp.asarray(rng.normal(size=(1, 2, 2, 16, 64)), jnp.float32)
+    op_elems = 3 * 3 * 16 * 16 * 64 * 64
+    auto = DSP.DispatchConfig(path="auto", materialize_limit=op_elems - 1)
+    assert DSP.choose_path("conv", auto, op_elems=op_elems) == "factored"
+    out_auto = DSP.conv(coef, k, 1, cfg=auto)
+    out_ref = DSP.conv(coef, k, 1, cfg=_cfg("reference"))
+    np.testing.assert_allclose(out_auto, out_ref, atol=1e-3)
+
+
+def test_precompute_resolves_paths(rng):
+    k = jnp.asarray(rng.normal(size=(4, 3, 3, 3)), jnp.float32)
+    op = DSP.precompute_conv(k, 1, cfg=_cfg("reference"))
+    assert op.path == "reference" and op.xi is not None
+    op = DSP.precompute_conv(k, 1, cfg=DSP.DispatchConfig(
+        path="auto", materialize_limit=0))
+    assert op.path == "factored" and op.xi is None
+    # forced pallas above the limit must degrade to factored, not OOM
+    op = DSP.precompute_conv(k, 1, cfg=DSP.DispatchConfig(
+        path="pallas", materialize_limit=0))
+    assert op.path == "factored"
+
+
+def test_apply_conv_matches_direct(rng):
+    k = jnp.asarray(rng.normal(size=(4, 3, 3, 3)) * 0.3, jnp.float32)
+    coef = jnp.asarray(rng.normal(size=(2, 4, 4, 3, 64)), jnp.float32)
+    for p in DSP.PATHS:
+        cfg = _cfg(p)
+        op = DSP.precompute_conv(k, 2, cfg=cfg)
+        a = DSP.apply_conv(coef, op, cfg=cfg)
+        b = DSP.conv(coef, k, 2, cfg=cfg)
+        np.testing.assert_allclose(a, b, atol=1e-5), p
+
+
+# --------------------------------------------------------------------------
+# Band truncation (paper §6 sparsity)
+# --------------------------------------------------------------------------
+
+
+def test_conv_bands_64_exact(rng):
+    k = jnp.asarray(rng.normal(size=(4, 3, 3, 3)) * 0.3, jnp.float32)
+    _, coef = _smooth_coef(rng)
+    exact = DSP.conv(coef, k, 1, cfg=_cfg("reference", bands=64))
+    for p in DSP.PATHS:
+        out = DSP.conv(coef, k, 1, cfg=_cfg(p, bands=64))
+        np.testing.assert_allclose(out, exact, atol=1e-4)
+
+
+def test_conv_bands_monotone_degradation(rng):
+    k = jnp.asarray(rng.normal(size=(4, 3, 3, 3)) * 0.3, jnp.float32)
+    _, coef = _smooth_coef(rng)
+    exact = DSP.conv(coef, k, 1, cfg=_cfg("reference"))
+    errs = []
+    for bands in (64, 48, 32, 16, 8):
+        out = DSP.conv(coef, k, 1, cfg=_cfg("reference", bands=bands))
+        errs.append(float(jnp.abs(out - exact).max()))
+    assert errs[0] < 1e-5  # bands=64 is the identity truncation
+    for lo, hi in zip(errs, errs[1:]):
+        assert hi >= lo - 1e-6, errs  # fewer bands never helps
+
+
+def test_conv_bands_parity_across_paths(rng):
+    """All three paths implement the *same* truncated operator."""
+    k = jnp.asarray(rng.normal(size=(4, 3, 3, 3)) * 0.3, jnp.float32)
+    _, coef = _smooth_coef(rng)
+    for bands in (32, 16):
+        ref = DSP.conv(coef, k, 1, cfg=_cfg("reference", bands=bands))
+        assert float(jnp.abs(ref[..., bands:]).max()) == 0.0
+        for p in ("pallas", "factored"):
+            out = DSP.conv(coef, k, 1, cfg=_cfg(p, bands=bands))
+            np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_asm_bands_parity_and_monotone(rng):
+    _, coef = _smooth_coef(rng)
+    exact = DSP.asm_relu(coef, 14, cfg=_cfg("reference"))
+    errs = []
+    for bands in (64, 32, 16):
+        ref = DSP.asm_relu(coef, 14, cfg=_cfg("reference", bands=bands))
+        pal = DSP.asm_relu(coef, 14, cfg=_cfg("pallas", bands=bands))
+        np.testing.assert_allclose(ref, pal, atol=2e-5)
+        errs.append(float(jnp.abs(ref - exact).max()))
+    assert errs[0] < 1e-6
+    for lo, hi in zip(errs, errs[1:]):
+        assert hi >= lo - 1e-6, errs
+
+
+# --------------------------------------------------------------------------
+# The other registry ops
+# --------------------------------------------------------------------------
+
+
+def test_asm_relu_parity(rng):
+    coef = jnp.asarray(rng.normal(size=(3, 4, 64)), jnp.float32)
+    for phi in (6, 14):
+        a = DSP.asm_relu(coef, phi, cfg=_cfg("reference"))
+        b = DSP.asm_relu(coef, phi, cfg=_cfg("pallas"))
+        np.testing.assert_allclose(a, b, atol=2e-5)
+        np.testing.assert_allclose(a, A.asm_relu(coef, phi), atol=1e-6)
+
+
+def test_block_dct_parity_and_roundtrip(rng):
+    blocks = jnp.asarray(rng.normal(size=(5, 8, 8)), jnp.float32)
+    for q in (None, 50):
+        a = DSP.block_dct(blocks, q, cfg=_cfg("reference"))
+        b = DSP.block_dct(blocks, q, cfg=_cfg("pallas"))
+        np.testing.assert_allclose(a, b, atol=2e-5)
+        back = DSP.block_idct(a, q, cfg=_cfg("pallas"))
+        np.testing.assert_allclose(back, blocks, atol=2e-5)
+
+
+def test_batchnorm_falls_back_to_reference(rng):
+    from repro.core import batchnorm as BN
+
+    coef = jnp.asarray(rng.normal(size=(2, 2, 2, 3, 64)), jnp.float32)
+    p, s = BN.init_batchnorm(3)
+    a, _ = DSP.batchnorm(coef, p, s, training=True, cfg=_cfg("reference"))
+    b, _ = DSP.batchnorm(coef, p, s, training=True, cfg=_cfg("pallas"))
+    np.testing.assert_allclose(a, b, atol=0)
+    assert DSP.available_paths("batchnorm") == ("reference",)
+
+
+# --------------------------------------------------------------------------
+# Config plumbing
+# --------------------------------------------------------------------------
+
+
+def test_override_is_scoped():
+    base = DSP.get_config()
+    with DSP.override(path="factored", bands=32) as cfg:
+        assert DSP.get_config() is cfg
+        assert cfg.path == "factored" and cfg.bands == 32
+    assert DSP.get_config() is base
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        DSP.DispatchConfig(path="mosaic")
+    with pytest.raises(ValueError):
+        DSP.DispatchConfig(bands=0)
+    with pytest.raises(ValueError):
+        DSP.DispatchConfig(bands=65)
+
+
+def test_env_parsing(monkeypatch):
+    monkeypatch.setenv("JPEG_DISPATCH", "factored")
+    monkeypatch.setenv("JPEG_BANDS", "24")
+    cfg = DSP._from_env()
+    assert cfg.path == "factored" and cfg.bands == 24
+
+
+def test_registry_rejects_unknown_path():
+    with pytest.raises(ValueError):
+        DSP.register("conv", "cuda", lambda *a: None)

@@ -69,13 +69,14 @@ import dataclasses
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs.base import reduced_config
 from repro.models import moe as M
+from repro.parallel.compat import make_mesh
 from repro.parallel.sharding import AxisRules, sharding_rules
 
 cfg = dataclasses.replace(reduced_config("mixtral-8x7b"), capacity_factor=8.0)
 params = M.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
 out_ref, aux_ref = M.moe_ffn(x, params, cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = AxisRules.default(False, data=2, model=4).with_mesh(mesh)
 with mesh, sharding_rules(rules):
     out_sm, aux_sm = jax.jit(lambda x, p: M.moe_ffn(x, p, cfg))(x, params)
@@ -90,9 +91,10 @@ print("MOE_EP_OK")
 def test_pipeline_parallel_matches_sequential():
     out = run_prog("""
 import numpy as np, jax, jax.numpy as jnp
+from repro.parallel.compat import make_mesh
 from repro.parallel.pipeline import pipelined_apply, stack_stage_params, bubble_fraction
 
-mesh = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("stage",))
 key = jax.random.PRNGKey(0)
 stages = [{"w": jax.random.normal(jax.random.fold_in(key, i), (16, 16)) * 0.3}
           for i in range(4)]
@@ -122,10 +124,10 @@ def test_collectives_helpers():
     out = run_prog("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import shard_map, make_mesh
 from repro.parallel.collectives import hierarchical_psum, psum_compressed, ring_all_gather
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("pod", "data"))
 
 def f(x):
     a = hierarchical_psum(x, "data", "pod")
@@ -152,13 +154,14 @@ import tempfile
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
+from repro.parallel.compat import make_mesh
 
 tree = {"w": jnp.arange(64.0).reshape(8, 8)}
 d = tempfile.mkdtemp()
 m = CheckpointManager(d)
 m.save(1, tree)
 for shape, axes in [((2, 4), ("data", "model")), ((4, 2), ("data", "model"))]:
-    mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh(shape, axes)
     sh = {"w": NamedSharding(mesh, P("data", "model"))}
     step, restored, _ = m.restore_latest(tree, sh)
     assert step == 1

@@ -96,8 +96,9 @@ sys.path.insert(0, {os.path.join(ROOT, 'src')!r})
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import analyze_hlo
+from repro.parallel.compat import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 def unroll(x, ws):
     for i in range(6):
         x = jnp.tanh(x @ ws[i])
@@ -107,7 +108,10 @@ ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
 with mesh:
     c = jax.jit(unroll, in_shardings=(NamedSharding(mesh, P("data", None)),
                                       NamedSharding(mesh, P(None, None, "model")))).lower(xs, ws).compile()
-xla = c.cost_analysis()["flops"]
+ca = c.cost_analysis()
+if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [dict]
+    ca = ca[0]
+xla = ca["flops"]
 mine = analyze_hlo(c.as_text(), 8).flops
 rel = abs(mine - xla) / xla
 print("xla", xla, "mine", mine, "rel", rel)
