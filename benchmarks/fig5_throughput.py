@@ -5,8 +5,27 @@ decompression, precomputed operators); training is marginally faster.  On
 CPU we measure the same quantities end-to-end, *including* the JPEG
 decompression step for the spatial model (its inputs are compressed files
 — decoding is part of its serving cost, exactly the paper's point).
+
+Modes (``--modes``, default all):
+
+* ``spatial``  — spatial-from-JPEG vs materialised/factored JPEG inference;
+* ``dispatch`` — the pallas path + global §6 band-truncation sweep;
+* ``plan``     — the convert-once ``InferencePlan`` (fused batch norm,
+  per-layer autotuned bands) against PR 1's per-step-batchnorm precomputed
+  path — the serving configuration;
+* ``train``    — one SGD step, both domains.
+
+Every row also lands in ``BENCH_fig5.json`` so the perf trajectory is
+tracked across PRs (CI uploads it as an artifact):
+
+    PYTHONPATH=src python -m benchmarks.fig5_throughput --reduced \
+        --modes plan --out BENCH_fig5.json
 """
 from __future__ import annotations
+
+import argparse
+import json
+import platform
 
 import jax
 import jax.numpy as jnp
@@ -16,23 +35,56 @@ import numpy as np
 from repro.core import convert as CV
 from repro.core import dispatch as DSP
 from repro.core import jpeg as J
+from repro.core import plan as PL
 from repro.core import resnet as R
 from benchmarks.common import time_fn
 from repro.data.synthetic import image_batch
 
 BATCH = 40  # the paper's batch size
 SPEC = R.ResNetSpec(widths=(8, 12, 16), num_classes=10)
+ALL_MODES = ("spatial", "dispatch", "plan", "train")
+DEFAULT_OUT = "BENCH_fig5.json"
 
 
-def run(emit) -> None:
+def run(emit, *, reduced: bool = False, modes=ALL_MODES,
+        out_path: str | None = DEFAULT_OUT) -> dict:
+    """Run the selected benchmark modes; returns (and writes) the rows."""
+    rows: list[dict] = []
+
+    def record(name, us, derived=""):
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+        emit(name, us, derived)
+
+    batch = 16 if reduced else BATCH
+    iters = 2 if reduced else 3
     params, state = R.init_resnet(jax.random.PRNGKey(0), SPEC)
-    d = image_batch(0, 0, BATCH, 32, 3, 10)
+    d = image_batch(0, 0, batch, 32, 3, 10)
     x = jnp.asarray(d["images"])
     y = jnp.asarray(d["labels"])
     coef = jnp.moveaxis(J.jpeg_encode(x, quality=50, scaled=True), 1, 3)
 
+    if "spatial" in modes:
+        _run_spatial(record, params, state, coef, batch, iters)
+    if "dispatch" in modes:
+        _run_dispatch(record, params, state, coef, batch, iters)
+    if "plan" in modes:
+        _run_plan(record, params, state, coef, batch, iters)
+    if "train" in modes:
+        _run_train(record, params, state, coef, y, batch)
+
+    out = {"bench": "fig5", "reduced": reduced, "batch": batch,
+           "modes": list(modes), "backend": jax.default_backend(),
+           "python": platform.python_version(), "rows": rows}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+def _run_spatial(emit, params, state, coef, batch, iters):
     # ---- inference: JPEG coefficients in, logits out ---------------------
-    model = CV.convert(params, state, SPEC)
+    model = CV.convert(params, state, SPEC, fuse_bn=False)
     jp_infer = jax.jit(model.__call__)
 
     def sp_infer_from_jpeg(c):
@@ -41,23 +93,25 @@ def run(emit) -> None:
                                spec=SPEC)[0]
 
     sp_infer = jax.jit(sp_infer_from_jpeg)
-    t_sp = time_fn(sp_infer, coef)
-    t_jp = time_fn(jp_infer, coef)
-    emit("fig5/infer_spatial", t_sp, f"img_per_s={BATCH / (t_sp / 1e6):.1f}")
+    t_sp = time_fn(sp_infer, coef, iters=iters)
+    t_jp = time_fn(jp_infer, coef, iters=iters)
+    emit("fig5/infer_spatial", t_sp, f"img_per_s={batch / (t_sp / 1e6):.1f}")
     emit("fig5/infer_jpeg_materialized", t_jp,
-         f"img_per_s={BATCH / (t_jp / 1e6):.1f}")
+         f"img_per_s={batch / (t_jp / 1e6):.1f}")
 
     # beyond-paper variant: factored J∘C∘J̃ application (never forms Ξ),
     # selected through the dispatch registry rather than module surgery.
     fact_cfg = DSP.DispatchConfig(path="factored")
     jp_fact = jax.jit(lambda c: R.jpeg_apply(
         params, state, c, training=False, spec=SPEC, dispatch=fact_cfg)[0])
-    t_jf = time_fn(jp_fact, coef)
+    t_jf = time_fn(jp_fact, coef, iters=iters)
     emit("fig5/infer_jpeg_factored", t_jf,
-         f"img_per_s={BATCH / (t_jf / 1e6):.1f}")
+         f"img_per_s={batch / (t_jf / 1e6):.1f}")
     emit("fig5/infer_speedup_materialized", 0.0, f"{t_sp / t_jp:.2f}x")
     emit("fig5/infer_speedup_factored", 0.0, f"{t_sp / t_jf:.2f}x")
 
+
+def _run_dispatch(emit, params, state, coef, batch, iters):
     # ---- dispatch: pallas path + §6 band truncation -----------------------
     # The paper's sparsity claim as a knob: keep only the first `bands`
     # zigzag coefficients in every operator.  On TPU the pallas path runs
@@ -66,23 +120,24 @@ def run(emit) -> None:
     # not a perf path).  Accuracy gate: top-1 agreement with the exact
     # reference on this batch must be 100% for the headline speedup.
     ref_cfg = DSP.DispatchConfig(path="reference", bands=64)
-    ref_model = CV.convert(params, state, SPEC, dispatch=ref_cfg)
+    ref_model = CV.convert(params, state, SPEC, dispatch=ref_cfg,
+                           fuse_bn=False)
     ref_infer = jax.jit(ref_model.__call__)
-    t_ref = time_fn(ref_infer, coef)
+    t_ref = time_fn(ref_infer, coef, iters=iters)
     ref_logits = np.asarray(ref_infer(coef))
     emit("fig5/infer_dispatch_reference", t_ref,
-         f"img_per_s={BATCH / (t_ref / 1e6):.1f}")
+         f"img_per_s={batch / (t_ref / 1e6):.1f}")
     agreeing = []  # (time, bands) at full top-1 agreement
     for bands in (48, 32, 16, 8):
         cfg = DSP.DispatchConfig(path="pallas", bands=bands)
-        model = CV.convert(params, state, SPEC, dispatch=cfg)
+        model = CV.convert(params, state, SPEC, dispatch=cfg, fuse_bn=False)
         fn = jax.jit(model.__call__)
-        t_b = time_fn(fn, coef)
+        t_b = time_fn(fn, coef, iters=iters)
         logits = np.asarray(fn(coef))
         agree = float(np.mean(logits.argmax(-1) == ref_logits.argmax(-1)))
         dev = float(np.abs(logits - ref_logits).max())
         emit(f"fig5/infer_dispatch_pallas_b{bands}", t_b,
-             f"img_per_s={BATCH / (t_b / 1e6):.1f} top1_agree={agree:.3f} "
+             f"img_per_s={batch / (t_b / 1e6):.1f} top1_agree={agree:.3f} "
              f"max_logit_dev={dev:.3f}")
         if agree == 1.0:
             agreeing.append((t_b, bands))
@@ -92,6 +147,38 @@ def run(emit) -> None:
              f"{t_ref / t_best:.2f}x (pallas, bands={bands_best}, "
              f"top1_agree=1.000)")
 
+
+def _run_plan(emit, params, state, coef, batch, iters):
+    # ---- the convert-once serving engine ---------------------------------
+    # Baseline: PR 1's precomputed path — operators baked, but batch norm
+    # still applied per step and one global band knob (=64).
+    base_cfg = DSP.DispatchConfig(path="reference", bands=64)
+    base = CV.convert(params, state, SPEC, dispatch=base_cfg, fuse_bn=False)
+    base_fn = jax.jit(base.__call__)
+    t_base = time_fn(base_fn, coef, iters=iters)
+    base_logits = np.asarray(base_fn(coef))
+    emit("fig5/infer_precomputed_stepbn", t_base,
+         f"img_per_s={batch / (t_base / 1e6):.1f}")
+
+    # Plan: batch norm fused into Ξ at precompute time, bands autotuned per
+    # layer from the quantization table + parity sweep on a probe slice.
+    plan = PL.build_plan(params, state, SPEC, dispatch=base_cfg,
+                         bands="auto", probe_coef=coef[:4])
+    plan_fn = jax.jit(lambda c: PL.apply_plan(plan, c))
+    t_plan = time_fn(plan_fn, coef, iters=iters)
+    logits = np.asarray(plan_fn(coef))
+    agree = float(np.mean(logits.argmax(-1) == base_logits.argmax(-1)))
+    dev = float(np.abs(logits - base_logits).max())
+    bands = sorted(set(plan.bands.values()))
+    emit("fig5/infer_plan_fused_autotuned", t_plan,
+         f"img_per_s={batch / (t_plan / 1e6):.1f} top1_agree={agree:.3f} "
+         f"max_logit_dev={dev:.3f} bands={'/'.join(map(str, bands))}")
+    emit("fig5/infer_speedup_plan", 0.0,
+         f"{t_base / t_plan:.2f}x (fused BN, per-layer bands, "
+         f"top1_agree={agree:.3f})")
+
+
+def _run_train(emit, params, state, coef, y, batch):
     # ---- training step ----------------------------------------------------
     @jax.jit
     def sp_train(params, c, y):
@@ -115,6 +202,28 @@ def run(emit) -> None:
 
     t_sp_t = time_fn(sp_train, params, coef, y, iters=2)
     t_jp_t = time_fn(jp_train, params, coef, y, iters=2)
-    emit("fig5/train_spatial", t_sp_t, f"img_per_s={BATCH / (t_sp_t / 1e6):.1f}")
-    emit("fig5/train_jpeg", t_jp_t, f"img_per_s={BATCH / (t_jp_t / 1e6):.1f}")
+    emit("fig5/train_spatial", t_sp_t, f"img_per_s={batch / (t_sp_t / 1e6):.1f}")
+    emit("fig5/train_jpeg", t_jp_t, f"img_per_s={batch / (t_jp_t / 1e6):.1f}")
     emit("fig5/train_speedup", 0.0, f"{t_sp_t / t_jp_t:.2f}x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="smaller batch / fewer timing iters (CI smoke)")
+    ap.add_argument("--modes", nargs="+", default=list(ALL_MODES),
+                    choices=ALL_MODES)
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="JSON results path ('' disables)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(emit, reduced=args.reduced, modes=tuple(args.modes),
+        out_path=args.out or None)
+
+
+if __name__ == "__main__":
+    main()

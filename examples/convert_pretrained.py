@@ -2,16 +2,20 @@
 
 Simulates a pretrained spatial ResNet exported as a ``{name: array}``
 state dict (OIHW convs, BN running stats), maps it into the framework via
-``from_torch_layout`` and verifies JPEG-domain equivalence — the paper's
-"apply pretrained spatial domain networks to JPEG images" workflow.
+``from_torch_layout``, verifies JPEG-domain equivalence — the paper's
+"apply pretrained spatial domain networks to JPEG images" workflow — and
+finishes with the deployment step: save the fused ``InferencePlan`` and
+serve from the restored artifact (convert once, load anywhere).
 
     PYTHONPATH=src python examples/convert_pretrained.py
 """
+import tempfile
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import convert, jpeg, resnet
+from repro.core import convert, jpeg, plan as planlib, resnet
 
 
 def export_torch_style(params, state, spec):
@@ -50,6 +54,17 @@ def main() -> None:
     coef = jnp.moveaxis(jpeg.jpeg_encode(x, quality=spec.quality,
                                          scaled=True), 1, 3)
     print("JPEG-domain predictions:", np.asarray(jnp.argmax(model(coef), -1)))
+
+    # save-plan -> serve-plan: persist the fused operators through the
+    # checkpoint manager; a serving process restores them and never
+    # re-explodes (repro.launch.serve --arch jpeg-resnet does this too).
+    with tempfile.TemporaryDirectory() as plan_dir:
+        planlib.save_plan(model.plan, plan_dir)
+        served = planlib.load_plan(plan_dir)
+        restored_logits = planlib.apply_plan(served, coef)
+        same = bool(jnp.array_equal(model(coef), restored_logits))
+        print(f"restored plan from {plan_dir}; bit-identical logits: {same}")
+        print("per-layer bands:", served.bands)
 
 
 if __name__ == "__main__":

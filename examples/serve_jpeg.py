@@ -1,8 +1,13 @@
 """Batched JPEG-classification service (the paper's deployment story):
 clients ship entropy-decoded JPEG coefficients; the service never
-decompresses.
+decompresses — and never re-explodes: serving is plan-backed.  The first
+run builds an ``InferencePlan`` (batch norm fused into the Ξ operators,
+per-layer bands autotuned from the quantization table), saves it through
+the checkpoint manager, and restores it; later runs restore the saved
+plan directly and skip conversion entirely.
 
     PYTHONPATH=src python examples/serve_jpeg.py
+    PYTHONPATH=src python examples/serve_jpeg.py --plan-dir /tmp/jpeg_plan
 """
 import argparse
 
@@ -13,12 +18,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-images", type=int, default=4,
+                    help="max images per request (random budget per slot)")
+    ap.add_argument("--plan-dir", default=None,
+                    help="where the serving plan is saved/restored "
+                         "(default plans/<arch>)")
     args = ap.parse_args()
     ns = argparse.Namespace(arch="jpeg-resnet", reduced=True,
                             batch=args.batch, requests=args.requests,
-                            ctx=0, max_new=0, seed=0)
+                            ctx=0, max_new=args.max_images, seed=0,
+                            dispatch=None, bands=None,
+                            plan_dir=args.plan_dir, autotune_bands=True)
     out = serve_jpeg_resnet(ns)
-    print(f"served {out['images']} images at {out['images_per_s']:.1f} img/s")
+    plan = out["plan"]
+    print(f"served {out['images']} images / {out['completed']} requests at "
+          f"{out['images_per_s']:.1f} img/s from "
+          f"{'freshly built' if plan['built'] else 'restored'} plan in "
+          f"{plan['dir']} (bands: {sorted(set(plan['bands'].values()))})")
 
 
 if __name__ == "__main__":

@@ -159,6 +159,40 @@ class CheckpointManager:
             leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
         return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
 
+    def restore_tree(self, step: int | None = None
+                     ) -> tuple[int, dict[str, np.ndarray], dict[str, Any]]:
+        """Template-free restore: ``(step, {path: array}, extra)``.
+
+        Unlike :meth:`restore` no target pytree is needed — leaves come
+        back keyed by their stored path strings (artifact loading, e.g.
+        ``core.plan.load_plan``, reconstructs its own structure from the
+        manifest ``extra``).  ``step=None`` picks the newest *valid* step;
+        an explicit step is checksum-verified before loading.  Raises
+        ``FileNotFoundError`` when no valid checkpoint exists.
+        """
+        if step is None:
+            step = next((s for s in reversed(self.steps()) if self._valid(s)),
+                        None)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no valid checkpoint under {self.directory}")
+        elif not self._valid(step):
+            raise FileNotFoundError(
+                f"checkpoint step {step} under {self.directory} is missing "
+                "or corrupt")
+        d = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path: dict[str, np.ndarray] = {}
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            for name, meta in manifest["leaves"].items():
+                arr = z[name]
+                if str(arr.dtype) != meta["dtype"]:
+                    # bf16 and friends were widened for npz storage
+                    arr = np.asarray(jnp.asarray(arr).astype(meta["dtype"]))
+                by_path[meta["path"]] = arr
+        return step, by_path, manifest["extra"]
+
     def restore_latest(self, target_tree: Any, sharding_tree: Any | None = None
                        ) -> tuple[int, Any, dict[str, Any]] | None:
         """Newest *valid* checkpoint, or None.  Skips corrupted steps."""

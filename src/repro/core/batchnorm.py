@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.core import dct as dctlib
 
 __all__ = ["BatchNormParams", "BatchNormState", "init_batchnorm", "batchnorm_jpeg",
-           "batchnorm_spatial"]
+           "batchnorm_spatial", "fold_batchnorm"]
 
 DC_GAIN = float(dctlib.BLOCK)  # orthonormal DC coefficient = 8 * mean
 
@@ -80,6 +80,28 @@ def batchnorm_jpeg(
     out = coef * inv[None, None, None, :, None]
     out = out.at[..., 0].add(shift[None, None, None, :])
     return out, new_state
+
+
+def fold_batchnorm(
+    params: BatchNormParams,
+    state: BatchNormState,
+    *,
+    eps: float = 1e-5,
+    dc_gain: float = DC_GAIN,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inference-mode batch norm as a per-channel affine ``(scale, shift)``.
+
+    Because inference BN is linear — ``y = x·inv + (β − μ·inv)`` with
+    ``inv = γ/√(σ²+ε)`` — it commutes with the JPEG-domain layout: the
+    scale multiplies every coefficient and the constant shifts only DC (by
+    ``dc_gain·(β − μ·inv)``).  Both fold into the *preceding* conv's Ξ at
+    precompute time (scale into the output-channel rows, shift as a DC-bias
+    term carried on the operator), deleting the per-step batchnorm from the
+    precomputed path entirely.  Returns ``(scale (C,), dc_shift (C,))``.
+    """
+    inv = params.gamma / jnp.sqrt(state.running_var + eps)
+    shift = (params.beta - state.running_mean * inv) * dc_gain
+    return inv, shift
 
 
 def batchnorm_spatial(

@@ -24,14 +24,24 @@ __all__ = ["ConvertedModel", "convert", "convert_and_verify", "from_torch_layout
 
 
 class ConvertedModel(NamedTuple):
+    """``operators`` mirrors ``plan.operators`` when a plan is carried —
+    i.e. BN-*fused*; feeding them to ``jpeg_apply_precomputed`` raises
+    (it would apply batch norm twice).  Convert with ``fuse_bn=False``
+    for unfused per-step-batchnorm operators."""
+
     params: Any
     state: Any
     operators: Any
     spec: resnetlib.ResNetSpec
     phi: int
     dispatch: Any = None  # DispatchConfig resolved at convert time
+    plan: Any = None      # InferencePlan (fused BN) when converted with one
 
     def __call__(self, coef: jnp.ndarray) -> jnp.ndarray:
+        if self.plan is not None:
+            from repro.core import plan as planlib
+
+            return planlib.apply_plan(self.plan, coef)
         return resnetlib.jpeg_apply_precomputed(
             self.params, self.state, self.operators, coef,
             spec=self.spec, phi=self.phi, dispatch=self.dispatch,
@@ -40,19 +50,33 @@ class ConvertedModel(NamedTuple):
 
 def convert(params, state, spec: resnetlib.ResNetSpec,
             phi: int = asmlib.EXACT_PHI,
-            dispatch=None) -> ConvertedModel:
+            dispatch=None, *, fuse_bn: bool = True, bands=None,
+            probe_coef=None) -> ConvertedModel:
     """Convert a (trained) spatial model for JPEG-domain inference.
 
     ``dispatch``: a ``core.dispatch.DispatchConfig`` resolving the apply
     path and band truncation of every precomputed operator (None = the
     global config *frozen here*, so later env/config changes cannot skew
     an already-converted model's ASM/batchnorm away from its operators).
+
+    By default the result carries an :class:`repro.core.plan.InferencePlan`
+    — inference-mode batch norm fused into the operators at convert time —
+    and ``__call__`` serves from it.  ``fuse_bn=False`` keeps the PR-1
+    behaviour (unfused operators, per-step batch norm).  ``bands`` is
+    forwarded to :func:`repro.core.plan.build_plan` (``"auto"`` autotunes
+    per layer from the quantization table; ``probe_coef`` enables the
+    parity sweep).
     """
     from repro.core import dispatch as dispatchlib
+    from repro.core import plan as planlib
 
     cfg = dispatchlib.resolve_config(dispatch)
-    ops = resnetlib.precompute_operators(params, spec, dispatch=cfg)
-    return ConvertedModel(params, state, ops, spec, phi, cfg)
+    if not fuse_bn:
+        ops = resnetlib.precompute_operators(params, spec, dispatch=cfg)
+        return ConvertedModel(params, state, ops, spec, phi, cfg)
+    plan = planlib.build_plan(params, state, spec, phi=phi, dispatch=cfg,
+                              bands=bands, probe_coef=probe_coef)
+    return ConvertedModel(params, state, plan.operators, spec, phi, cfg, plan)
 
 
 def convert_and_verify(

@@ -193,6 +193,14 @@ class ConvOperator(NamedTuple):
     ``xi`` is the (possibly band-truncated) materialised Ξ; ``kernel`` is
     retained for the factored path (which never forms Ξ).  Closure-only:
     hold it outside jit arguments (``path``/metadata are not pytree leaves).
+
+    ``scale``/``shift`` carry a fused inference-mode batch norm (see
+    ``core.batchnorm.fold_batchnorm``): on materialised paths the scale is
+    already folded into Ξ's output-channel rows at precompute time (so the
+    field is None); the factored path, which never forms Ξ, keeps it and
+    applies it per step.  ``shift`` is the DC-coefficient bias added after
+    the conv.  ``bands`` is *per-operator* — the plan autotuner may assign
+    each layer its own truncation instead of the global knob.
     """
 
     xi: jnp.ndarray | None
@@ -203,6 +211,8 @@ class ConvOperator(NamedTuple):
     in_scaled: bool
     out_scaled: bool
     path: str
+    scale: jnp.ndarray | None = None
+    shift: jnp.ndarray | None = None
 
 
 def _conv_reference(coef, kernel, stride, cfg, *, in_scaled, out_scaled,
@@ -251,23 +261,38 @@ def conv(coef: jnp.ndarray, kernel: jnp.ndarray, stride: int = 1,
 
 def precompute_conv(kernel: jnp.ndarray, stride: int = 1, *,
                     in_scaled: bool = False, out_scaled: bool = False,
-                    quality: int = 50,
+                    quality: int = 50, bands: int | None = None,
+                    scale: jnp.ndarray | None = None,
+                    shift: jnp.ndarray | None = None,
                     cfg: DispatchConfig | None = None) -> ConvOperator:
     """Explode a layer once for inference (paper §4.1 "can be precomputed").
 
     The apply path is resolved here — by size, backend, and override — so
     :func:`apply_conv` is a pure table lookup per step.
+
+    ``bands`` overrides ``cfg.bands`` for this operator (per-layer
+    autotuning); ``scale``/``shift`` fuse a folded inference batch norm:
+    the scale multiplies Ξ's output-channel rows here (materialised paths)
+    or is retained for per-step application (factored path); the DC shift
+    is always carried on the operator and added by :func:`apply_conv`.
     """
     cfg = resolve_config(cfg)
+    bands = cfg.bands if bands is None else bands
     path = choose_path("conv", cfg, op_elems=convlib.operator_elems(
-        kernel.shape, stride, cfg.bands))
+        kernel.shape, stride, bands))
     xi = None
     if path != "factored":
         xi = convlib.explode(kernel, stride, quality=quality,
                              in_scaled=in_scaled, out_scaled=out_scaled,
-                             bands=cfg.bands)
-    return ConvOperator(xi, kernel, stride, cfg.bands, quality,
-                        in_scaled, out_scaled, path)
+                             bands=bands)
+        if scale is not None:
+            # BN scale folds into the output-channel axis of Ξ
+            # (ndy, ndx, Cin, bands, Cout, bands).
+            xi = xi * jnp.asarray(scale, xi.dtype)[None, None, None, None, :,
+                                                   None]
+            scale = None
+    return ConvOperator(xi, kernel, stride, bands, quality,
+                        in_scaled, out_scaled, path, scale, shift)
 
 
 def _apply_reference(coef, op: ConvOperator, cfg):
@@ -290,9 +315,19 @@ def _apply_factored(coef, op: ConvOperator, cfg):
 
 def apply_conv(coef: jnp.ndarray, op: ConvOperator,
                cfg: DispatchConfig | None = None) -> jnp.ndarray:
-    """Apply a precomputed operator along its resolved path."""
+    """Apply a precomputed operator along its resolved path.
+
+    Honors the operator's fused batch norm: ``scale`` (only present on the
+    factored path — materialised Ξ already absorbed it) multiplies every
+    output coefficient per channel, ``shift`` adds to DC.
+    """
     cfg = resolve_config(cfg)
-    return lookup("conv_apply", op.path)(coef, op, cfg)
+    out = lookup("conv_apply", op.path)(coef, op, cfg)
+    if op.scale is not None:
+        out = out * op.scale[None, None, None, :, None]
+    if op.shift is not None:
+        out = out.at[..., 0].add(op.shift[None, None, None, :])
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -313,8 +348,13 @@ def _asm_pallas(coef, phi, cfg):
 
 
 def asm_relu(coef: jnp.ndarray, phi: int = asmlib.EXACT_PHI,
-             cfg: DispatchConfig | None = None) -> jnp.ndarray:
+             cfg: DispatchConfig | None = None, *,
+             bands: int | None = None) -> jnp.ndarray:
+    """``bands`` overrides ``cfg.bands`` for this call (per-layer plans
+    run each activation at its layer's autotuned truncation)."""
     cfg = resolve_config(cfg)
+    if bands is not None and bands != cfg.bands:
+        cfg = dataclasses.replace(cfg, bands=bands)
     path = choose_path("asm_relu", cfg)
     return lookup("asm_relu", path)(coef, phi, cfg)
 

@@ -1,0 +1,506 @@
+"""Convert-once inference engine: the ``InferencePlan`` artifact.
+
+The paper's deployment story (§4.1 "the map can be precomputed to speed up
+inference", §6 sparsity) lands here as a single object.  Building a plan:
+
+* **fuses inference-mode batch norm** into the adjacent conv's Ξ operator
+  (``core.batchnorm.fold_batchnorm``): the scale multiplies Ξ's
+  output-channel rows at precompute time and the β/μ constant rides on the
+  operator as a DC shift — the per-step ``dispatch.batchnorm`` calls
+  disappear from the precomputed path entirely;
+* **autotunes ``bands`` per layer**: the quantization table already crushed
+  high-frequency energy, so an energy budget over ``1/q²`` picks each
+  layer's truncation (``bands_for_budget``), optionally refined by a parity
+  sweep against the reference full-band path (``autotune_bands``).  The
+  global ``DispatchConfig.bands`` knob remains as an override;
+* is **serializable** through ``checkpoint.manager.CheckpointManager``
+  (``save_plan``/``load_plan``): numeric leaves go into the checksummed
+  array store, static structure into the manifest ``extra`` JSON, so a
+  serving process restores the plan and never re-explodes at trace time.
+
+``resnet.precompute_operators`` / ``resnet.jpeg_apply_precomputed`` are
+thin wrappers over :func:`build_operators` / :func:`apply_operators` (the
+unfused, per-step-batchnorm walk kept for training-state parity checks and
+as the perf baseline); :func:`build_plan` / :func:`apply_plan` are the
+serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import batchnorm as bnlib
+from repro.core import dct as dctlib
+from repro.core import dispatch as dispatchlib
+from repro.core import pooling as poollib
+from repro.core import resnet as resnetlib
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "InferencePlan",
+    "qtable_band_energy",
+    "bands_for_budget",
+    "autotune_bands",
+    "operator_keys",
+    "build_operators",
+    "apply_operators",
+    "build_plan",
+    "apply_plan",
+    "save_plan",
+    "load_plan",
+]
+
+#: candidate band counts the autotuner moves along (multiples of 8 keep the
+#: coefficient axis lane-aligned for the Pallas kernels).
+BAND_LADDER = (8, 16, 24, 32, 40, 48, 56, 64)
+
+
+# --------------------------------------------------------------------------
+# Per-layer band autotuning (ROADMAP "Band autotuning")
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def qtable_band_energy(quality: int = 50) -> np.ndarray:
+    """Cumulative retained-energy fraction per zigzag prefix length.
+
+    The quantization table divides coefficient ``k`` by ``q[k]``; for a
+    flat spectral prior the signal energy surviving quantization scales as
+    ``1/q[k]²`` — exactly the "high-frequency energy the qtable already
+    crushes".  ``out[b-1]`` is the fraction of that retained energy covered
+    by keeping the first ``b`` zigzag coefficients; it is non-decreasing.
+    """
+    q = dctlib.quantization_table(quality)
+    w = 1.0 / (q * q)
+    return np.cumsum(w) / np.sum(w)
+
+
+def bands_for_budget(quality: int, budget: float) -> int:
+    """Smallest band count whose cumulative qtable energy ≥ ``budget``.
+
+    Rounded up to a multiple of 8 (lane alignment).  Monotone in
+    ``budget``: a tighter (smaller) budget never yields *more* bands.
+    """
+    if not 0.0 < budget <= 1.0:
+        raise ValueError(f"budget must be in (0, 1], got {budget}")
+    cum = qtable_band_energy(quality)
+    b = int(np.searchsorted(cum, budget - 1e-12) + 1)
+    return min(dctlib.NFREQ, ((b + 7) // 8) * 8)
+
+
+def operator_keys(params: Any, spec: resnetlib.ResNetSpec) -> list[str]:
+    """Flat conv-operator keys in forward order: ``stem``, ``s0b0/conv1``…"""
+    keys = ["stem"]
+    for name, s, cin, w in resnetlib._stages(spec):
+        if "proj" in params[name]:
+            keys.append(f"{name}/proj")
+        keys.append(f"{name}/conv1")
+        keys.append(f"{name}/conv2")
+    return keys
+
+
+def autotune_bands(
+    params: Any,
+    state: Any,
+    spec: resnetlib.ResNetSpec,
+    *,
+    budget: float = 0.95,
+    probe_coef: jnp.ndarray | None = None,
+    tol: float = 5e-2,
+    ladder: tuple[int, ...] = BAND_LADDER,
+    phi: int | None = None,
+) -> dict[str, int]:
+    """Per-layer band assignment from qtable energy + optional parity sweep.
+
+    Every conv operator starts at :func:`bands_for_budget` (the qtable
+    energy heuristic — monotone in ``budget``).  With ``probe_coef``
+    (a small ``(N, bh, bw, C, 64)`` coefficient batch) the assignment is
+    refined against the *reference path at full bands*:
+
+    1. escalate all layers one ladder step while the probe logits disagree
+       (top-1) or deviate by more than ``tol`` — the heuristic may be too
+       aggressive for a particular network;
+    2. one greedy tightening pass, last layer to first: lower each layer
+       individually while parity still holds — layers differ in
+       sensitivity, which is what makes the result genuinely per-layer.
+    """
+    base = bands_for_budget(spec.quality, budget)
+    keys = operator_keys(params, spec)
+    bands = {k: base for k in keys}
+    if probe_coef is None:
+        return bands
+
+    # The sweep probes many assignments that differ in a single layer, so
+    # operators are exploded once per distinct (layer, band) pair and
+    # trial plans are assembled from that cache — not rebuilt per probe.
+    phi = spec.phi if phi is None else phi
+    ref_cfg = dispatchlib.DispatchConfig(path="reference",
+                                         bands=dctlib.NFREQ)
+    folds = _fold_all(params, state, spec)
+    ops_at: dict[int, dict[str, Any]] = {}
+
+    def ops_for(level: int) -> dict[str, Any]:
+        if level not in ops_at:
+            ops_at[level] = build_operators(params, spec, ref_cfg,
+                                            folds=folds, bands=level)
+        return ops_at[level]
+
+    def plan_for(assign: dict[str, int]) -> InferencePlan:
+        operators: dict[str, Any] = {"stem": ops_for(assign["stem"])["stem"]}
+        for name, s, cin, w in resnetlib._stages(spec):
+            entry = {}
+            for slot in ops_for(assign[f"{name}/conv1"])[name]:
+                entry[slot] = ops_for(assign[f"{name}/{slot}"])[name][slot]
+            operators[name] = entry
+        return InferencePlan(operators, params["head"]["w"],
+                             params["head"]["b"], spec, phi, ref_cfg,
+                             dict(assign))
+
+    ref = np.asarray(apply_plan(plan_for({k: dctlib.NFREQ for k in keys}),
+                                probe_coef))
+    ref_top1 = ref.argmax(-1)
+
+    def parity(assign: dict[str, int]) -> bool:
+        got = np.asarray(apply_plan(plan_for(assign), probe_coef))
+        return (float(np.abs(got - ref).max()) <= tol
+                and bool((got.argmax(-1) == ref_top1).all()))
+
+    def bump(b: int) -> int:
+        nxt = [l for l in ladder if l > b]
+        return nxt[0] if nxt else dctlib.NFREQ
+
+    while not parity(bands) and any(v < dctlib.NFREQ for v in bands.values()):
+        bands = {k: bump(v) for k, v in bands.items()}
+
+    for k in reversed(keys):
+        while True:
+            lower = [l for l in ladder if l < bands[k]]
+            if not lower:
+                break
+            trial = dict(bands)
+            trial[k] = lower[-1]
+            if not parity(trial):
+                break
+            bands = trial
+    return bands
+
+
+# --------------------------------------------------------------------------
+# Operator construction + the two forward walks
+# --------------------------------------------------------------------------
+
+
+def _resolve_bands(bands: Any, key: str,
+                   cfg: dispatchlib.DispatchConfig) -> int:
+    if bands is None:
+        return cfg.bands
+    if isinstance(bands, int):
+        return bands
+    return int(bands.get(key, cfg.bands))
+
+
+def build_operators(params: Any, spec: resnetlib.ResNetSpec,
+                    cfg: dispatchlib.DispatchConfig, *,
+                    folds: dict[str, tuple] | None = None,
+                    bands: Any = None) -> dict[str, Any]:
+    """Explode every convolution once; returns the operator pytree.
+
+    ``folds`` maps operator keys to ``(scale, shift)`` pairs from
+    ``batchnorm.fold_batchnorm`` (fused-BN plans); ``bands`` is None
+    (global ``cfg.bands``), an int, or a per-key dict.  Each leaf is a
+    :class:`repro.core.dispatch.ConvOperator` with its apply path resolved
+    here — apply is a pure table lookup per step.
+    """
+    folds = folds or {}
+
+    def pc(key, kernel, stride, **kw):
+        scale, shift = folds.get(key, (None, None))
+        return dispatchlib.precompute_conv(
+            kernel, stride, bands=_resolve_bands(bands, key, cfg),
+            scale=scale, shift=shift, cfg=cfg, **kw)
+
+    ops: dict[str, Any] = {"stem": pc("stem", params["stem"]["kernel"], 1,
+                                      in_scaled=True, quality=spec.quality)}
+    for name, s, cin, w in resnetlib._stages(spec):
+        blk = params[name]
+        entry = {
+            "conv1": pc(f"{name}/conv1", blk["conv1"], s),
+            "conv2": pc(f"{name}/conv2", blk["conv2"], 1),
+        }
+        if "proj" in blk:
+            entry["proj"] = pc(f"{name}/proj", blk["proj"], s)
+        ops[name] = entry
+    return ops
+
+
+def apply_operators(params: Any, state: Any, ops: dict[str, Any],
+                    coef: jnp.ndarray, *, spec: resnetlib.ResNetSpec,
+                    phi: int | None = None,
+                    cfg: dispatchlib.DispatchConfig | None = None
+                    ) -> jnp.ndarray:
+    """Precomputed-operator inference with *per-step* batch norm.
+
+    The unfused walk — kept as the parity baseline against ``jpeg_apply``
+    (it consumes the live ``state``) and as the perf baseline the fused
+    :func:`apply_plan` is measured against.  Rejects operators that carry
+    a fused batch norm: applying ``state`` on top of them would run BN
+    twice and silently corrupt the logits — use :func:`apply_plan`.
+    """
+    phi = spec.phi if phi is None else phi
+    cfg = dispatchlib.resolve_config(cfg)
+    stem = ops["stem"]
+    if stem.shift is not None or stem.scale is not None:
+        raise ValueError(
+            "operators carry a fused batch norm (built by build_plan); "
+            "applying per-step batch norm on top would run BN twice — "
+            "serve them through plan.apply_plan, or build unfused "
+            "operators with resnet.precompute_operators")
+
+    def bn(name, h):
+        p = bnlib.BatchNormParams(params[name]["gamma"], params[name]["beta"])
+        s = bnlib.BatchNormState(state[name]["mean"], state[name]["var"])
+        h, _ = dispatchlib.batchnorm(h, p, s, training=False, cfg=cfg)
+        return h
+
+    def relu(h):
+        return dispatchlib.asm_relu(h, phi, cfg=cfg)
+
+    h = dispatchlib.apply_conv(coef, ops["stem"], cfg=cfg)
+    h = relu(bn("stem_bn", h))
+    for name, s, cin, w in resnetlib._stages(spec):
+        blk, op = params[name], ops[name]
+        short = h
+        if "proj" in blk:
+            short = dispatchlib.apply_conv(h, op["proj"], cfg=cfg)
+        h = dispatchlib.apply_conv(h, op["conv1"], cfg=cfg)
+        h = relu(bn(name + "_bn1", h))
+        h = dispatchlib.apply_conv(h, op["conv2"], cfg=cfg)
+        h = bn(name + "_bn2", h)
+        h = relu(poollib.residual_add(h, short))
+    pooled = poollib.global_avg_pool_jpeg(h)
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+# --------------------------------------------------------------------------
+# The plan artifact
+# --------------------------------------------------------------------------
+
+
+class InferencePlan(NamedTuple):
+    """Everything JPEG-domain serving needs, precomputed once.
+
+    ``operators`` carry the fused batch norms (scale folded into Ξ, DC
+    shift on the operator) at their per-layer band truncations; batch-norm
+    parameters and running statistics are *gone* — only the head weights
+    remain as raw parameters.  Closure-only (static metadata is not a
+    pytree leaf): close over the plan in a jitted lambda rather than
+    passing it as a jit argument.
+    """
+
+    operators: dict[str, Any]
+    head_w: jnp.ndarray
+    head_b: jnp.ndarray
+    spec: resnetlib.ResNetSpec
+    phi: int
+    cfg: dispatchlib.DispatchConfig
+    bands: dict[str, int]
+    #: how the band assignment was produced ({"bands_mode": "auto" |
+    #: "global" | "explicit", ...}) — serving uses it to decide whether a
+    #: restored plan satisfies an --autotune-bands request.
+    provenance: Any = None
+
+    def __call__(self, coef: jnp.ndarray) -> jnp.ndarray:
+        return apply_plan(self, coef)
+
+
+def build_plan(
+    params: Any,
+    state: Any,
+    spec: resnetlib.ResNetSpec,
+    *,
+    phi: int | None = None,
+    dispatch: dispatchlib.DispatchConfig | None = None,
+    bands: Any = None,
+    budget: float | None = None,
+    probe_coef: jnp.ndarray | None = None,
+    eps: float = 1e-5,
+) -> InferencePlan:
+    """Fuse, autotune, and explode a trained model into an ``InferencePlan``.
+
+    ``bands``: None → the frozen dispatch config's global knob (the
+    override path); an int or per-key dict → explicit assignment; the
+    string ``"auto"`` (or a ``budget``) → :func:`autotune_bands` from the
+    quantization table, refined by a parity sweep when ``probe_coef`` is
+    given.
+    """
+    phi = spec.phi if phi is None else phi
+    cfg = dispatchlib.resolve_config(dispatch)
+    autotuned = bands == "auto" or budget is not None
+    if autotuned:
+        bands = autotune_bands(params, state, spec,
+                               budget=0.95 if budget is None else budget,
+                               probe_coef=probe_coef, phi=phi)
+    provenance = {
+        "bands_mode": ("auto" if autotuned
+                       else "global" if bands is None
+                       else "explicit"),
+        "budget": budget,
+        "probe": probe_coef is not None,
+    }
+    folds = _fold_all(params, state, spec, eps=eps)
+    ops = build_operators(params, spec, cfg, folds=folds, bands=bands)
+    resolved = {k: _resolve_bands(bands, k, cfg)
+                for k in operator_keys(params, spec)}
+    return InferencePlan(ops, params["head"]["w"], params["head"]["b"],
+                         spec, phi, cfg, resolved, provenance)
+
+
+def _fold_all(params: Any, state: Any, spec: resnetlib.ResNetSpec,
+              eps: float = 1e-5) -> dict[str, tuple]:
+    """(scale, shift) folds for every batch-normed conv, keyed like
+    :func:`operator_keys` (proj convs have no BN and get no entry)."""
+
+    def fold(bn_name):
+        p = bnlib.BatchNormParams(params[bn_name]["gamma"],
+                                  params[bn_name]["beta"])
+        s = bnlib.BatchNormState(state[bn_name]["mean"],
+                                 state[bn_name]["var"])
+        return bnlib.fold_batchnorm(p, s, eps=eps)
+
+    folds = {"stem": fold("stem_bn")}
+    for name, s, cin, w in resnetlib._stages(spec):
+        folds[f"{name}/conv1"] = fold(name + "_bn1")
+        folds[f"{name}/conv2"] = fold(name + "_bn2")
+    return folds
+
+
+def apply_plan(plan: InferencePlan, coef: jnp.ndarray,
+               cfg: dispatchlib.DispatchConfig | None = None) -> jnp.ndarray:
+    """Serve from a plan: matmuls + ASM only — no batch norm, no explode.
+
+    Each activation runs ASM at its producing layer's band truncation (the
+    residual join runs at the wider of its two contributors, since the
+    shortcut may carry coefficients the main branch truncated away).
+    """
+    cfg = plan.cfg if cfg is None else cfg
+    ops = plan.operators
+
+    def relu(h, b):
+        return dispatchlib.asm_relu(h, plan.phi, cfg=cfg, bands=b)
+
+    h = dispatchlib.apply_conv(coef, ops["stem"], cfg=cfg)
+    cur = ops["stem"].bands
+    h = relu(h, cur)
+    h = shard(h, "batch", None, None, None, None)
+    for name, s, cin, w in resnetlib._stages(plan.spec):
+        op = ops[name]
+        short, short_bands = h, cur
+        if "proj" in op:
+            short = dispatchlib.apply_conv(h, op["proj"], cfg=cfg)
+            short_bands = op["proj"].bands
+        h = dispatchlib.apply_conv(h, op["conv1"], cfg=cfg)
+        h = relu(h, op["conv1"].bands)
+        h = dispatchlib.apply_conv(h, op["conv2"], cfg=cfg)
+        cur = max(op["conv2"].bands, short_bands)
+        h = relu(poollib.residual_add(h, short), cur)
+        h = shard(h, "batch", None, None, None, None)
+    pooled = poollib.global_avg_pool_jpeg(h)
+    return pooled @ plan.head_w + plan.head_b
+
+
+# --------------------------------------------------------------------------
+# Serialization through the checkpoint manager
+# --------------------------------------------------------------------------
+
+_OP_ARRAYS = ("xi", "kernel", "scale", "shift")
+_OP_STATIC = ("stride", "bands", "quality", "in_scaled", "out_scaled", "path")
+_PLAN_FORMAT = 1
+
+
+def _flat_ops(plan: InferencePlan) -> dict[str, dispatchlib.ConvOperator]:
+    out = {}
+    for name, entry in plan.operators.items():
+        if isinstance(entry, dict):
+            out.update({f"{name}/{slot}": op for slot, op in entry.items()})
+        else:
+            out[name] = entry
+    return out
+
+
+def _leaf_path(key: str) -> str:
+    """The path string CheckpointManager records for flat-dict key ``key``
+    (derived through jax itself so renames in DictKey.__str__ can't skew
+    the format)."""
+    (path, _), = jax.tree_util.tree_flatten_with_path({key: 0})[0]
+    return "/".join(str(p) for p in path)
+
+
+def save_plan(plan: InferencePlan, directory: str, step: int = 0,
+              keep: int = 3) -> None:
+    """Persist a plan: arrays through the checksummed/atomic checkpoint
+    store, static structure in the manifest ``extra`` JSON."""
+    from repro.checkpoint import CheckpointManager
+
+    arrays: dict[str, np.ndarray] = {"head.w": np.asarray(plan.head_w),
+                                     "head.b": np.asarray(plan.head_b)}
+    meta_ops: dict[str, dict[str, Any]] = {}
+    for key, op in _flat_ops(plan).items():
+        meta_ops[key] = {f: getattr(op, f) for f in _OP_STATIC}
+        for f in _OP_ARRAYS:
+            val = getattr(op, f)
+            meta_ops[key][f"has_{f}"] = val is not None
+            if val is not None:
+                arrays[f"{key}.{f}"] = np.asarray(val)
+    extra = {
+        "kind": "jpeg_inference_plan",
+        "format": _PLAN_FORMAT,
+        "spec": dict(plan.spec._asdict(), widths=list(plan.spec.widths)),
+        "phi": plan.phi,
+        "cfg": dataclasses.asdict(plan.cfg),
+        "bands": plan.bands,
+        "provenance": plan.provenance,
+        "ops": meta_ops,
+    }
+    CheckpointManager(directory, keep=keep).save(step, arrays, extra=extra)
+
+
+def load_plan(directory: str, step: int | None = None) -> InferencePlan:
+    """Restore an :class:`InferencePlan` saved by :func:`save_plan`.
+
+    Bit-exact: restored logits equal the pre-save plan's (tests assert
+    array equality across all three dispatch paths).
+    """
+    from repro.checkpoint import CheckpointManager
+
+    _, by_path, extra = CheckpointManager(directory).restore_tree(step)
+    if extra.get("kind") != "jpeg_inference_plan":
+        raise ValueError(f"{directory} does not hold an inference plan")
+    if extra.get("format") != _PLAN_FORMAT:
+        raise ValueError(f"unsupported plan format {extra.get('format')!r}")
+
+    def arr(key):
+        return jnp.asarray(by_path[_leaf_path(key)])
+
+    spec_d = dict(extra["spec"], widths=tuple(extra["spec"]["widths"]))
+    spec = resnetlib.ResNetSpec(**spec_d)
+    cfg = dispatchlib.DispatchConfig(**extra["cfg"])
+    operators: dict[str, Any] = {}
+    for key, meta in extra["ops"].items():
+        fields = {f: meta[f] for f in _OP_STATIC}
+        for f in _OP_ARRAYS:
+            fields[f] = arr(f"{key}.{f}") if meta[f"has_{f}"] else None
+        op = dispatchlib.ConvOperator(**fields)
+        if "/" in key:
+            name, slot = key.split("/", 1)
+            operators.setdefault(name, {})[slot] = op
+        else:
+            operators[key] = op
+    return InferencePlan(operators, arr("head.w"), arr("head.b"), spec,
+                         int(extra["phi"]), cfg,
+                         {k: int(v) for k, v in extra["bands"].items()},
+                         extra.get("provenance"))

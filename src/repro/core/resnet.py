@@ -214,53 +214,30 @@ def precompute_operators(params, spec: ResNetSpec,
                          dispatch: dispatchlib.DispatchConfig | None = None):
     """Explode every convolution once; returns an operator pytree.
 
-    Each leaf is a :class:`repro.core.dispatch.ConvOperator` whose apply
-    path (reference / pallas / factored) and band truncation were resolved
-    at precompute time from ``dispatch`` (None = global config).
+    Thin wrapper over :func:`repro.core.plan.build_operators` (the
+    convert-once engine) — unfused, so batch norm still runs per step from
+    the live ``state``.  Each leaf is a
+    :class:`repro.core.dispatch.ConvOperator` whose apply path (reference /
+    pallas / factored) and band truncation were resolved at precompute time
+    from ``dispatch`` (None = global config).  For fused-BN, per-layer-band
+    serving build an :class:`repro.core.plan.InferencePlan` instead.
     """
-    cfg = dispatchlib.resolve_config(dispatch)
-    pc = dispatchlib.precompute_conv
-    ops = {"stem": pc(params["stem"]["kernel"], 1, in_scaled=True,
-                      quality=spec.quality, cfg=cfg)}
-    for name, s, cin, w in _stages(spec):
-        blk = params[name]
-        entry = {
-            "conv1": pc(blk["conv1"], s, cfg=cfg),
-            "conv2": pc(blk["conv2"], 1, cfg=cfg),
-        }
-        if "proj" in blk:
-            entry["proj"] = pc(blk["proj"], s, cfg=cfg)
-        ops[name] = entry
-    return ops
+    from repro.core import plan as planlib
+
+    return planlib.build_operators(params, spec,
+                                   dispatchlib.resolve_config(dispatch))
 
 
 def jpeg_apply_precomputed(params, state, ops, coef, *, spec: ResNetSpec,
                            phi: int | None = None,
                            dispatch: dispatchlib.DispatchConfig | None = None):
-    """Inference-only apply using precomputed exploded operators."""
-    phi = spec.phi if phi is None else phi
-    cfg = dispatchlib.resolve_config(dispatch)
+    """Inference-only apply using precomputed exploded operators.
 
-    def bn(name, h):
-        p = bnlib.BatchNormParams(params[name]["gamma"], params[name]["beta"])
-        s = bnlib.BatchNormState(state[name]["mean"], state[name]["var"])
-        h, _ = dispatchlib.batchnorm(h, p, s, training=False, cfg=cfg)
-        return h
+    Thin wrapper over :func:`repro.core.plan.apply_operators` — the
+    per-step-batchnorm walk, kept as the parity/perf baseline against the
+    fused :func:`repro.core.plan.apply_plan`.
+    """
+    from repro.core import plan as planlib
 
-    def relu(h):
-        return dispatchlib.asm_relu(h, phi, cfg=cfg)
-
-    h = dispatchlib.apply_conv(coef, ops["stem"], cfg=cfg)
-    h = relu(bn("stem_bn", h))
-    for name, s, cin, w in _stages(spec):
-        blk, op = params[name], ops[name]
-        short = h
-        if "proj" in blk:
-            short = dispatchlib.apply_conv(h, op["proj"], cfg=cfg)
-        h = dispatchlib.apply_conv(h, op["conv1"], cfg=cfg)
-        h = relu(bn(name + "_bn1", h))
-        h = dispatchlib.apply_conv(h, op["conv2"], cfg=cfg)
-        h = bn(name + "_bn2", h)
-        h = relu(h + short)
-    pooled = poollib.global_avg_pool_jpeg(h)
-    return pooled @ params["head"]["w"] + params["head"]["b"]
+    return planlib.apply_operators(params, state, ops, coef, spec=spec,
+                                   phi=phi, cfg=dispatch)

@@ -8,14 +8,27 @@ image-classification service (``--arch jpeg-resnet``): batches of JPEG
 coefficients in, labels out — the paper's "skip the decompression step"
 deployment story.
 
+jpeg-resnet serving is **plan-backed** (convert-once): the process restores
+an :class:`repro.core.plan.InferencePlan` from ``--plan-dir`` — fused
+batch norm, per-layer autotuned bands, apply paths resolved at build time
+— and never calls ``precompute_operators`` (let alone re-explodes Ξ) at
+serve time.  When the directory holds no usable plan, one is built once,
+saved through the checkpoint manager, and *re-loaded from disk* so every
+serve run exercises the restore path.  Requests then run through the same
+slot pool as the LM driver: each request classifies a random number of
+images, finished slots are refilled from the pending queue.
+
 CPU example:
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --reduced --batch 4 --requests 12 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch jpeg-resnet \
+        --reduced --batch 8 --requests 12 --autotune-bands
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
@@ -26,7 +39,7 @@ from repro.configs.base import get_config, reduced_config
 from repro.core import dispatch as dispatchlib
 from repro.models.registry import build_model
 
-__all__ = ["main", "serve_lm", "serve_jpeg_resnet"]
+__all__ = ["main", "serve_lm", "serve_jpeg_resnet", "prepare_plan"]
 
 
 def serve_lm(args) -> dict:
@@ -39,11 +52,11 @@ def serve_lm(args) -> dict:
 
     decode = jax.jit(model.decode_step)
 
-    # synthetic request stream
-    pending = args.requests
+    # synthetic request stream; never start more than args.requests
+    started = min(b, args.requests)
+    pending = args.requests - started
     budgets = rng.integers(4, args.max_new + 1, size=(b,))
-    pending -= b
-    active = np.ones((b,), bool)
+    active = np.arange(b) < started
     produced = np.zeros((b,), np.int64)
     tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, 1)), jnp.int32)
 
@@ -75,13 +88,63 @@ def serve_lm(args) -> dict:
     return out
 
 
+def prepare_plan(args, cfg, dcfg):
+    """Restore the serving plan from ``--plan-dir``, building it first only
+    when the directory holds no compatible plan.
+
+    Returns ``(plan, info)`` where the plan always comes from a *disk
+    restore* — a fresh build is saved and re-loaded, so the
+    save → CheckpointManager → load round trip is on the serve path by
+    construction.
+    """
+    from repro.core import plan as planlib
+    from repro.core import resnet as R
+    from repro.models.registry import jpeg_resnet_spec
+
+    spec = jpeg_resnet_spec(cfg)
+    autotune = getattr(args, "autotune_bands", False)
+    plan_dir = args.plan_dir or os.path.join("plans", cfg.name)
+    plan, built = None, False
+    try:
+        plan = planlib.load_plan(plan_dir)
+    except (FileNotFoundError, ValueError, KeyError):
+        plan = None
+    if plan is not None and (
+            plan.spec != spec
+            or (args.dispatch is not None and plan.cfg.path != args.dispatch)
+            or (args.bands is not None
+                and set(plan.bands.values()) != {args.bands})
+            or (autotune
+                and (plan.provenance or {}).get("bands_mode") != "auto")):
+        plan = None  # stale artifact for a different config — rebuild
+    if plan is None:
+        built = True
+        params, state = R.init_resnet(jax.random.PRNGKey(args.seed), spec)
+        probe = None
+        if autotune:
+            from repro.data import jpeg_iterator
+
+            probe_it = jpeg_iterator(args.seed + 1, 4, cfg.image_size,
+                                     cfg.in_channels, cfg.num_classes)
+            probe = jnp.asarray(next(probe_it)["coefficients"])
+        bands = "auto" if autotune else args.bands
+        plan = planlib.build_plan(params, state, spec, dispatch=dcfg,
+                                  bands=bands, probe_coef=probe)
+        planlib.save_plan(plan, plan_dir)
+        plan = planlib.load_plan(plan_dir)  # serve from the restored artifact
+    return plan, {"dir": plan_dir, "built": built, "bands": plan.bands,
+                  "path": plan.cfg.path, "fused_bn": True}
+
+
 def serve_jpeg_resnet(args) -> dict:
+    from repro.core import plan as planlib
     from repro.data import jpeg_iterator
 
-    # The whole forward goes through core.dispatch: the flags pick the
-    # operator path (reference / pallas / factored) and the §6 band
-    # truncation before anything is traced/compiled.  Omitted flags defer
-    # to the JPEG_DISPATCH / JPEG_BANDS environment defaults.
+    # The dispatch flags pick the operator path (reference / pallas /
+    # factored) and the §6 band truncation before anything is traced or
+    # compiled; omitted flags defer to JPEG_DISPATCH / JPEG_BANDS.  They
+    # only matter when a plan has to be *built* — a restored plan carries
+    # its own frozen config.
     changes = {}
     if args.dispatch is not None:
         changes["path"] = args.dispatch
@@ -89,25 +152,49 @@ def serve_jpeg_resnet(args) -> dict:
         changes["bands"] = args.bands
     dcfg = dispatchlib.configure(**changes)
     cfg = reduced_config("jpeg-resnet") if args.reduced else get_config("jpeg-resnet")
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(args.seed))
+    plan, plan_info = prepare_plan(args, cfg, dcfg)
+
+    fwd = jax.jit(lambda c: planlib.apply_plan(plan, c))
     it = jpeg_iterator(args.seed, args.batch, cfg.image_size,
                        cfg.in_channels, cfg.num_classes)
-    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
     # warmup/compile
-    batch = next(it)
-    fwd(params, {k: jnp.asarray(v) for k, v in batch.items()}).block_until_ready()
+    fwd(jnp.asarray(next(it)["coefficients"])).block_until_ready()
+
+    # slot-based continuous batching (same structure as serve_lm): each
+    # request classifies a random number of images; finished slots refill
+    # from the pending queue so the batch stays full until the tail.
+    rng = np.random.default_rng(args.seed)
+    b = args.batch
+    max_imgs = max(args.max_new, 1)
+    # never start more requests than were asked for (requests < batch
+    # leaves the tail slots idle)
+    started = min(b, args.requests)
+    pending = args.requests - started
+    budgets = rng.integers(1, max_imgs + 1, size=(b,))
+    active = np.arange(b) < started
+    produced = np.zeros((b,), np.int64)
     n_imgs = 0
+    completed = 0
     t0 = time.time()
-    for _ in range(args.requests):
-        batch = next(it)
-        logits = fwd(params, {k: jnp.asarray(v) for k, v in batch.items()})
-        logits.block_until_ready()
-        n_imgs += args.batch
+    while completed < args.requests and active.any():
+        logits = fwd(jnp.asarray(next(it)["coefficients"]))
+        logits.block_until_ready()  # labels would ship to clients here
+        n_imgs += int(active.sum())
+        produced += active
+        done = active & (produced >= budgets)
+        for i in np.where(done)[0]:
+            completed += 1
+            produced[i] = 0
+            if pending > 0:
+                pending -= 1
+                budgets[i] = rng.integers(1, max_imgs + 1)
+            else:
+                active[i] = False
     wall = time.time() - t0
     out = {"arch": cfg.name, "images": n_imgs, "wall_s": wall,
            "images_per_s": n_imgs / max(wall, 1e-9),
-           "dispatch": dcfg.path, "bands": dcfg.bands}
+           "completed": completed, "dispatch": plan.cfg.path,
+           "plan": plan_info}
     print(json.dumps(out))
     return out
 
@@ -128,6 +215,14 @@ def main() -> None:
     ap.add_argument("--bands", type=int, default=None,
                     help="zigzag coefficients kept (paper §6 sparsity; "
                          "default: JPEG_BANDS env or 64)")
+    ap.add_argument("--plan-dir", default=None,
+                    help="jpeg-resnet InferencePlan checkpoint directory "
+                         "(default plans/<arch>); restored at startup, "
+                         "built+saved once if absent")
+    ap.add_argument("--autotune-bands", action="store_true",
+                    help="when building the plan, pick per-layer bands "
+                         "from the quantization table + a parity sweep "
+                         "instead of the global knob")
     args = ap.parse_args()
     if args.arch == "jpeg-resnet":
         serve_jpeg_resnet(args)

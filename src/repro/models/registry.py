@@ -20,7 +20,7 @@ from repro.models import layers as L
 from repro.models import transformer as T
 
 __all__ = ["Model", "build_model", "input_specs", "decode_lengths",
-           "cell_is_skipped", "count_params"]
+           "cell_is_skipped", "count_params", "jpeg_resnet_spec"]
 
 
 class Model(NamedTuple):
@@ -65,14 +65,23 @@ def _lm_model(cfg: ModelConfig, remat: str = "none") -> Model:
 # --------------------------------------------------------------------------
 
 
-def _jpeg_resnet_model(cfg: ModelConfig, remat: str = "none") -> Model:
+def jpeg_resnet_spec(cfg: ModelConfig):
+    """The ``ResNetSpec`` a jpeg_resnet ``ModelConfig`` describes — the one
+    place the field mapping lives (the model builder and the plan-backed
+    serving path both resolve specs through it)."""
     from repro.core import resnet as R
 
-    spec = R.ResNetSpec(
+    return R.ResNetSpec(
         in_channels=cfg.in_channels, widths=tuple(cfg.widths),
         blocks_per_stage=cfg.blocks_per_stage, num_classes=cfg.num_classes,
         phi=cfg.asm_phi,
     )
+
+
+def _jpeg_resnet_model(cfg: ModelConfig, remat: str = "none") -> Model:
+    from repro.core import resnet as R
+
+    spec = jpeg_resnet_spec(cfg)
     use_remat = remat != "none"
 
     def init_params(key):

@@ -79,19 +79,33 @@ def test_precomputed_matches_per_layer_banded(setup):
 
 def test_converted_model_keeps_its_dispatch(setup):
     """A ConvertedModel freezes the dispatch config it was converted with:
-    its ASM/batchnorm must run banded to match its banded operators, even
-    when the global config says otherwise."""
+    its ASM must run banded to match its banded fused operators, even when
+    the global config says otherwise."""
     from repro.core import convert as CV
+    from repro.core import plan as PL
 
     spec, params, state, coef, _ = setup
     cfg = DSP.DispatchConfig(path="reference", bands=32)
     model = CV.convert(params, state, spec, dispatch=cfg)
     assert model.dispatch == cfg
-    want = R.jpeg_apply_precomputed(params, state, model.operators, coef,
-                                    spec=spec, dispatch=cfg)
+    assert model.plan is not None and model.plan.cfg == cfg
+    want = PL.apply_plan(model.plan, coef)
     with DSP.override(path="reference", bands=64):
         got = model(coef)
-    np.testing.assert_allclose(got, want, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_converted_model_unfused_matches_per_step(setup):
+    """fuse_bn=False keeps the PR-1 per-step-batchnorm contract exactly."""
+    from repro.core import convert as CV
+
+    spec, params, state, coef, _ = setup
+    cfg = DSP.DispatchConfig(path="reference", bands=32)
+    model = CV.convert(params, state, spec, dispatch=cfg, fuse_bn=False)
+    assert model.plan is None
+    want = R.jpeg_apply_precomputed(params, state, model.operators, coef,
+                                    spec=spec, dispatch=cfg)
+    np.testing.assert_array_equal(np.asarray(model(coef)), np.asarray(want))
 
 
 def test_banded_accuracy_degrades_gracefully(setup):
