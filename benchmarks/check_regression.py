@@ -1,0 +1,83 @@
+"""Perf guard over the fig5 trajectory: compare a fresh ``BENCH_fig5.json``
+against the committed baseline and fail when any shared speedup row
+regresses by more than the allowed fraction.
+
+Speedups are same-run *ratios* (e.g. compiled-over-plan on the same
+machine), so they are comparable across hosts in a way raw microseconds
+are not.  Rows are matched by name on a prefix (default
+``fig5/infer_speedup_``); rows present in only one file are reported but
+not compared (modes come and go across PRs), and the guard fails if the
+intersection is empty — a silently-empty comparison must not pass.
+
+    python -m benchmarks.check_regression baseline.json BENCH_fig5.json \
+        --max-regression 0.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def speedup_of(row: dict) -> float | None:
+    """Numeric speedup of a row: the ``speedup`` field, else the leading
+    ``<x>x`` of ``derived`` (older baselines predate the field)."""
+    if row.get("speedup") is not None:
+        return float(row["speedup"])
+    derived = row.get("derived", "")
+    head = derived.split("x")[0].strip()
+    try:
+        return float(head.split()[-1])
+    except (ValueError, IndexError):
+        return None
+
+
+def load_speedups(path: str, prefix: str) -> dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    out = {}
+    for row in data.get("rows", []):
+        if row.get("name", "").startswith(prefix):
+            val = speedup_of(row)
+            if val is not None:
+                out[row["name"]] = val
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_fig5.json")
+    ap.add_argument("fresh", help="freshly measured BENCH_fig5.json")
+    ap.add_argument("--max-regression", type=float, default=0.2,
+                    help="allowed fractional drop below baseline (0.2 = "
+                         "fail under 80%% of the committed speedup)")
+    ap.add_argument("--prefix", default="fig5/infer_speedup_")
+    args = ap.parse_args()
+
+    base = load_speedups(args.baseline, args.prefix)
+    fresh = load_speedups(args.fresh, args.prefix)
+    compared, failures = 0, []
+    for name in sorted(set(base) | set(fresh)):
+        if name not in base or name not in fresh:
+            where = "baseline" if name in base else "fresh"
+            print(f"SKIP {name}: only in {where}")
+            continue
+        compared += 1
+        floor = base[name] * (1.0 - args.max_regression)
+        status = "FAIL" if fresh[name] < floor else "ok"
+        print(f"{status:4s} {name}: baseline {base[name]:.2f}x -> "
+              f"fresh {fresh[name]:.2f}x (floor {floor:.2f}x)")
+        if fresh[name] < floor:
+            failures.append(name)
+    if not compared:
+        print("FAIL: no speedup rows shared between baseline and fresh run")
+        sys.exit(1)
+    if failures:
+        print(f"perf guard failed: {', '.join(failures)}")
+        sys.exit(1)
+    print(f"perf guard passed ({compared} speedup rows within "
+          f"{args.max_regression:.0%} of baseline)")
+
+
+if __name__ == "__main__":
+    main()

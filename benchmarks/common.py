@@ -24,6 +24,25 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(times))
 
 
+def time_pair(fn_a, fn_b, *args, warmup: int = 1,
+              iters: int = 3) -> tuple[float, float]:
+    """Interleaved A/B timing: median microseconds for each of two
+    functions, sampled alternately so machine-load drift hits both sides
+    of a ratio equally — use for speedup rows that feed the perf guard."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append((time.perf_counter() - t0) * 1e6)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ta)), float(np.median(tb))
+
+
 def train_spatial_resnet(spec: R.ResNetSpec, steps: int, batch: int,
                          seed: int, lr: float = 1e-2, momentum: float = 0.9):
     """Train the paper's small spatial ResNet on synthetic images."""

@@ -12,20 +12,28 @@ Modes (``--modes``, default all):
 * ``dispatch`` — the pallas path + global §6 band-truncation sweep;
 * ``plan``     — the convert-once ``InferencePlan`` (fused batch norm,
   per-layer autotuned bands) against PR 1's per-step-batchnorm precomputed
-  path — the serving configuration;
+  path;
+* ``compiled`` — the compiled plan (``core.plan.compile_plan``): fused
+  residual-block steps over tile-packed banded operators, measured against
+  the per-layer plan walk at the *same* band assignment — the serving
+  configuration;
 * ``train``    — one SGD step, both domains.
 
-Every row also lands in ``BENCH_fig5.json`` so the perf trajectory is
-tracked across PRs (CI uploads it as an artifact):
+Every row lands in ``BENCH_fig5.json`` tagged with its mode, alongside the
+backend, device count, and git SHA, so the perf trajectory is comparable
+across PRs regardless of which modes a given run requested (CI uploads the
+file as an artifact and ``benchmarks.check_regression`` guards the
+speedups):
 
     PYTHONPATH=src python -m benchmarks.fig5_throughput --reduced \
-        --modes plan --out BENCH_fig5.json
+        --modes plan compiled --out BENCH_fig5.json
 """
 from __future__ import annotations
 
 import argparse
 import json
 import platform
+import subprocess
 
 import jax
 import jax.numpy as jnp
@@ -37,23 +45,36 @@ from repro.core import dispatch as DSP
 from repro.core import jpeg as J
 from repro.core import plan as PL
 from repro.core import resnet as R
-from benchmarks.common import time_fn
+from benchmarks.common import time_fn, time_pair
 from repro.data.synthetic import image_batch
 
 BATCH = 40  # the paper's batch size
 SPEC = R.ResNetSpec(widths=(8, 12, 16), num_classes=10)
-ALL_MODES = ("spatial", "dispatch", "plan", "train")
+ALL_MODES = ("spatial", "dispatch", "plan", "compiled", "train")
 DEFAULT_OUT = "BENCH_fig5.json"
+
+
+def _git_sha() -> str | None:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True, timeout=10,
+                              check=True).stdout.strip()
+    except Exception:
+        return None
 
 
 def run(emit, *, reduced: bool = False, modes=ALL_MODES,
         out_path: str | None = DEFAULT_OUT) -> dict:
     """Run the selected benchmark modes; returns (and writes) the rows."""
     rows: list[dict] = []
+    mode_tag = [None]
 
-    def record(name, us, derived=""):
-        rows.append({"name": name, "us_per_call": round(us, 1),
-                     "derived": derived})
+    def record(name, us, derived="", speedup=None):
+        row = {"name": name, "us_per_call": round(us, 1),
+               "derived": derived, "mode": mode_tag[0]}
+        if speedup is not None:
+            row["speedup"] = round(float(speedup), 3)
+        rows.append(row)
         emit(name, us, derived)
 
     batch = 16 if reduced else BATCH
@@ -65,16 +86,20 @@ def run(emit, *, reduced: bool = False, modes=ALL_MODES,
     coef = jnp.moveaxis(J.jpeg_encode(x, quality=50, scaled=True), 1, 3)
 
     if "spatial" in modes:
+        mode_tag[0] = "spatial"
         _run_spatial(record, params, state, coef, batch, iters)
     if "dispatch" in modes:
+        mode_tag[0] = "dispatch"
         _run_dispatch(record, params, state, coef, batch, iters)
-    if "plan" in modes:
-        _run_plan(record, params, state, coef, batch, iters)
+    if "plan" in modes or "compiled" in modes:
+        _run_plan(record, params, state, coef, batch, iters, modes, mode_tag)
     if "train" in modes:
+        mode_tag[0] = "train"
         _run_train(record, params, state, coef, y, batch)
 
     out = {"bench": "fig5", "reduced": reduced, "batch": batch,
            "modes": list(modes), "backend": jax.default_backend(),
+           "device_count": jax.device_count(), "git_sha": _git_sha(),
            "python": platform.python_version(), "rows": rows}
     if out_path:
         with open(out_path, "w") as f:
@@ -107,8 +132,10 @@ def _run_spatial(emit, params, state, coef, batch, iters):
     t_jf = time_fn(jp_fact, coef, iters=iters)
     emit("fig5/infer_jpeg_factored", t_jf,
          f"img_per_s={batch / (t_jf / 1e6):.1f}")
-    emit("fig5/infer_speedup_materialized", 0.0, f"{t_sp / t_jp:.2f}x")
-    emit("fig5/infer_speedup_factored", 0.0, f"{t_sp / t_jf:.2f}x")
+    emit("fig5/infer_speedup_materialized", 0.0, f"{t_sp / t_jp:.2f}x",
+         speedup=t_sp / t_jp)
+    emit("fig5/infer_speedup_factored", 0.0, f"{t_sp / t_jf:.2f}x",
+         speedup=t_sp / t_jf)
 
 
 def _run_dispatch(emit, params, state, coef, batch, iters):
@@ -145,37 +172,66 @@ def _run_dispatch(emit, params, state, coef, batch, iters):
         t_best, bands_best = min(agreeing)
         emit("fig5/infer_speedup_dispatch_banded", 0.0,
              f"{t_ref / t_best:.2f}x (pallas, bands={bands_best}, "
-             f"top1_agree=1.000)")
+             f"top1_agree=1.000)", speedup=t_ref / t_best)
 
 
-def _run_plan(emit, params, state, coef, batch, iters):
+def _run_plan(emit, params, state, coef, batch, iters, modes, mode_tag):
     # ---- the convert-once serving engine ---------------------------------
     # Baseline: PR 1's precomputed path — operators baked, but batch norm
     # still applied per step and one global band knob (=64).
+    mode_tag[0] = "plan"
+    # the plan/compiled speedup ratios feed the CI perf guard
+    # (benchmarks.check_regression): sample both sides of each ratio
+    # interleaved (time_pair) with enough iterations for a stable median
+    # even in --reduced mode — these calls are the cheap ones.
+    iters = max(iters, 5)
     base_cfg = DSP.DispatchConfig(path="reference", bands=64)
-    base = CV.convert(params, state, SPEC, dispatch=base_cfg, fuse_bn=False)
-    base_fn = jax.jit(base.__call__)
-    t_base = time_fn(base_fn, coef, iters=iters)
-    base_logits = np.asarray(base_fn(coef))
-    emit("fig5/infer_precomputed_stepbn", t_base,
-         f"img_per_s={batch / (t_base / 1e6):.1f}")
 
     # Plan: batch norm fused into Ξ at precompute time, bands autotuned per
     # layer from the quantization table + parity sweep on a probe slice.
     plan = PL.build_plan(params, state, SPEC, dispatch=base_cfg,
                          bands="auto", probe_coef=coef[:4])
     plan_fn = jax.jit(lambda c: PL.apply_plan(plan, c))
-    t_plan = time_fn(plan_fn, coef, iters=iters)
     logits = np.asarray(plan_fn(coef))
-    agree = float(np.mean(logits.argmax(-1) == base_logits.argmax(-1)))
-    dev = float(np.abs(logits - base_logits).max())
     bands = sorted(set(plan.bands.values()))
-    emit("fig5/infer_plan_fused_autotuned", t_plan,
-         f"img_per_s={batch / (t_plan / 1e6):.1f} top1_agree={agree:.3f} "
-         f"max_logit_dev={dev:.3f} bands={'/'.join(map(str, bands))}")
-    emit("fig5/infer_speedup_plan", 0.0,
-         f"{t_base / t_plan:.2f}x (fused BN, per-layer bands, "
-         f"top1_agree={agree:.3f})")
+
+    if "plan" in modes:
+        base = CV.convert(params, state, SPEC, dispatch=base_cfg,
+                          fuse_bn=False)
+        base_fn = jax.jit(base.__call__)
+        t_base, t_plan = time_pair(base_fn, plan_fn, coef, iters=iters)
+        base_logits = np.asarray(base_fn(coef))
+        emit("fig5/infer_precomputed_stepbn", t_base,
+             f"img_per_s={batch / (t_base / 1e6):.1f}")
+        agree = float(np.mean(logits.argmax(-1) == base_logits.argmax(-1)))
+        dev = float(np.abs(logits - base_logits).max())
+        emit("fig5/infer_plan_fused_autotuned", t_plan,
+             f"img_per_s={batch / (t_plan / 1e6):.1f} top1_agree={agree:.3f} "
+             f"max_logit_dev={dev:.3f} bands={'/'.join(map(str, bands))}")
+        emit("fig5/infer_speedup_plan", 0.0,
+             f"{t_base / t_plan:.2f}x (fused BN, per-layer bands, "
+             f"top1_agree={agree:.3f})", speedup=t_base / t_plan)
+
+    if "compiled" in modes:
+        # Compiled schedule: fused residual-block steps over tile-packed
+        # banded operators, at the *same* per-layer band assignment as the
+        # plan walk it is measured against (equal bands, equal math).
+        mode_tag[0] = "compiled"
+        cp = PL.compile_plan(plan)
+        comp_fn = jax.jit(lambda c: PL.apply_compiled(cp, c))
+        t_plan, t_comp = time_pair(plan_fn, comp_fn, coef, iters=iters)
+        clogits = np.asarray(comp_fn(coef))
+        agree = float(np.mean(clogits.argmax(-1) == logits.argmax(-1)))
+        dev = float(np.abs(clogits - logits).max())
+        n_fused = len(cp.meta["fused"])
+        n_layers = len(cp.meta["layers"])  # per-layer *steps*, stem included
+        emit("fig5/infer_compiled_fused", t_comp,
+             f"img_per_s={batch / (t_comp / 1e6):.1f} top1_agree={agree:.3f} "
+             f"max_logit_dev={dev:.4f} fused_blocks={n_fused} "
+             f"fallback_steps={n_layers} bands={'/'.join(map(str, bands))}")
+        emit("fig5/infer_speedup_compiled", 0.0,
+             f"{t_plan / t_comp:.2f}x over plan walk (fused blocks, packed "
+             f"operators, top1_agree={agree:.3f})", speedup=t_plan / t_comp)
 
 
 def _run_train(emit, params, state, coef, y, batch):
@@ -204,7 +260,8 @@ def _run_train(emit, params, state, coef, y, batch):
     t_jp_t = time_fn(jp_train, params, coef, y, iters=2)
     emit("fig5/train_spatial", t_sp_t, f"img_per_s={batch / (t_sp_t / 1e6):.1f}")
     emit("fig5/train_jpeg", t_jp_t, f"img_per_s={batch / (t_jp_t / 1e6):.1f}")
-    emit("fig5/train_speedup", 0.0, f"{t_sp_t / t_jp_t:.2f}x")
+    emit("fig5/train_speedup", 0.0, f"{t_sp_t / t_jp_t:.2f}x",
+         speedup=t_sp_t / t_jp_t)
 
 
 def main() -> None:

@@ -28,13 +28,17 @@ def main() -> None:
                             batch=args.batch, requests=args.requests,
                             ctx=0, max_new=args.max_images, seed=0,
                             dispatch=None, bands=None,
-                            plan_dir=args.plan_dir, autotune_bands=True)
+                            plan_dir=args.plan_dir, autotune_bands=True,
+                            compiled=None)
     out = serve_jpeg_resnet(ns)
     plan = out["plan"]
+    how = ("compiled fused-block schedule" if plan["compiled"]
+           else "per-layer plan walk")
     print(f"served {out['images']} images / {out['completed']} requests at "
           f"{out['images_per_s']:.1f} img/s from "
           f"{'freshly built' if plan['built'] else 'restored'} plan in "
-          f"{plan['dir']} (bands: {sorted(set(plan['bands'].values()))})")
+          f"{plan['dir']} via the {how} "
+          f"(bands: {sorted(set(plan['bands'].values()))})")
 
 
 if __name__ == "__main__":

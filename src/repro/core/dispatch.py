@@ -48,7 +48,7 @@ __all__ = [
     "PATHS", "DispatchConfig", "get_config", "configure", "override",
     "resolve_config", "register", "lookup", "available_paths", "choose_path",
     "ConvOperator", "conv", "precompute_conv", "apply_conv", "asm_relu",
-    "batchnorm", "block_dct", "block_idct",
+    "batchnorm", "block_dct", "block_idct", "fused_block",
 ]
 
 PATHS = ("reference", "pallas", "factored")
@@ -201,6 +201,12 @@ class ConvOperator(NamedTuple):
     applies it per step.  ``shift`` is the DC-coefficient bias added after
     the conv.  ``bands`` is *per-operator* — the plan autotuner may assign
     each layer its own truncation instead of the global knob.
+
+    ``bn_scale`` retains the *original* folded scale even when it was
+    already multiplied into Ξ: plan compilation (``core.plan.compile_plan``)
+    re-lowers the layer from ``kernel`` for backends where Ξ matmuls are
+    not the fastest form, and needs the fold to reproduce the same math.
+    :func:`apply_conv` never applies it.
     """
 
     xi: jnp.ndarray | None
@@ -213,6 +219,7 @@ class ConvOperator(NamedTuple):
     path: str
     scale: jnp.ndarray | None = None
     shift: jnp.ndarray | None = None
+    bn_scale: jnp.ndarray | None = None
 
 
 def _conv_reference(coef, kernel, stride, cfg, *, in_scaled, out_scaled,
@@ -281,6 +288,7 @@ def precompute_conv(kernel: jnp.ndarray, stride: int = 1, *,
     path = choose_path("conv", cfg, op_elems=convlib.operator_elems(
         kernel.shape, stride, bands))
     xi = None
+    bn_scale = scale
     if path != "factored":
         xi = convlib.explode(kernel, stride, quality=quality,
                              in_scaled=in_scaled, out_scaled=out_scaled,
@@ -292,7 +300,7 @@ def precompute_conv(kernel: jnp.ndarray, stride: int = 1, *,
                                                    None]
             scale = None
     return ConvOperator(xi, kernel, stride, bands, quality,
-                        in_scaled, out_scaled, path, scale, shift)
+                        in_scaled, out_scaled, path, scale, shift, bn_scale)
 
 
 def _apply_reference(coef, op: ConvOperator, cfg):
@@ -357,6 +365,42 @@ def asm_relu(coef: jnp.ndarray, phi: int = asmlib.EXACT_PHI,
         cfg = dataclasses.replace(cfg, bands=bands)
     path = choose_path("asm_relu", cfg)
     return lookup("asm_relu", path)(coef, phi, cfg)
+
+
+# --------------------------------------------------------------------------
+# Fused residual block (compiled plans — ``core.plan.compile_plan``)
+# --------------------------------------------------------------------------
+
+
+def _fused_reference(x, block, phi, cfg):
+    # XLA backends: the block-fused math in its FLOP-optimal lowering —
+    # spatial-resident between the block-edge transforms.
+    from repro.kernels.fused_block import fused_block_spatial
+
+    return fused_block_spatial(x, block, phi)
+
+
+def _fused_pallas(x, block, phi, cfg):
+    if _pallas_delegates(cfg):
+        return _fused_reference(x, block, phi, cfg)
+    from repro.kernels import ops as kops
+
+    return kops.fused_block(x, block.conv1, block.asm_mid, block.conv2,
+                            block.asm_out, block.proj)
+
+
+def fused_block(x: jnp.ndarray, block, phi: int, *, path: str | None = None,
+                cfg: DispatchConfig | None = None) -> jnp.ndarray:
+    """One whole residual block of a compiled plan
+    (``core.plan.CompiledBlock``): the Pallas megakernel over the packed
+    banded operators on TPU, the spatial-resident XLA lowering elsewhere.
+    ``path`` is normally the block's compile-time resolution; None
+    re-resolves from ``cfg`` (there is no factored fused kernel — a
+    forced-factored config falls back to the reference executor).
+    """
+    cfg = resolve_config(cfg)
+    path = choose_path("fused_block", cfg) if path is None else path
+    return lookup("fused_block", path)(x, block, phi, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -451,6 +495,9 @@ register("conv_apply", "factored", _apply_factored)
 
 register("asm_relu", "reference", _asm_reference)
 register("asm_relu", "pallas", _asm_pallas)
+
+register("fused_block", "reference", _fused_reference)
+register("fused_block", "pallas", _fused_pallas)
 
 register("batchnorm", "reference", _bn_reference)
 

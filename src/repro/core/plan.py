@@ -23,6 +23,23 @@ thin wrappers over :func:`build_operators` / :func:`apply_operators` (the
 unfused, per-step-batchnorm walk kept for training-state parity checks and
 as the perf baseline); :func:`build_plan` / :func:`apply_plan` are the
 serving path.
+
+A plan can additionally be **compiled** (:func:`compile_plan`): the
+per-layer dispatch walk is lowered into a static schedule whose steps are
+fused residual-block megakernels (``kernels.fused_block``) over
+**tile-packed** banded operators (``kernels.tiling``) — band-truncated Ξ
+slices padded to sublane-aligned per-channel widths and concatenated into
+one contiguous buffer per layer at compile time, batch-norm DC shifts
+baked into broadcast rows, ASM matrices packed to the same widths.  The
+compiled runtime path (:func:`apply_compiled`) therefore does zero band
+slicing/padding between ops: activations stay at their packed widths from
+the stem to the classifier head, and each residual block is one fused step
+(conv → ASM → conv → residual add → ASM with no HBM round trips between
+them on the Pallas path).  Blocks whose operators are not materialised or
+whose VMEM estimate exceeds the budget fall back to the per-layer walk —
+recorded per block in ``CompiledPlan.meta``.  Compiled schedules serialize
+through the same ``CheckpointManager`` (:func:`save_compiled_plan` /
+:func:`load_compiled_plan`) with bit-identical restored logits.
 """
 from __future__ import annotations
 
@@ -53,6 +70,13 @@ __all__ = [
     "apply_plan",
     "save_plan",
     "load_plan",
+    "CompiledStem",
+    "CompiledBlock",
+    "CompiledPlan",
+    "compile_plan",
+    "apply_compiled",
+    "save_compiled_plan",
+    "load_compiled_plan",
 ]
 
 #: candidate band counts the autotuner moves along (multiples of 8 keep the
@@ -414,12 +438,281 @@ def apply_plan(plan: InferencePlan, coef: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Compiled plan execution: fused megakernels over tile-packed operators
+# --------------------------------------------------------------------------
+
+#: default per-instance VMEM allowance for a fused block (of the ~16 MB/core
+#: budget; the rest is headroom for Mosaic's own spills and double buffering).
+VMEM_BUDGET = 12 << 20
+
+
+def _r8(bands: int) -> int:
+    """Packed per-channel width for a band count (sublane-aligned)."""
+    from repro.kernels import tiling
+
+    return min(dctlib.NFREQ, tiling.round_up(bands, tiling.SUBLANE))
+
+
+class CompiledStem(NamedTuple):
+    """The compiled stem step: one packed conv + ASM (no residual)."""
+
+    kind: str                  # "packed" | "layers"
+    conv: Any                  # tiling.PackedConv | None
+    asm: Any                   # tiling.PackedAsm | None
+    op: Any                    # ConvOperator (fallback walk) | None
+    cin: int
+    cout: int
+    w_in: int                  # zigzag prefix sliced from the raw coefficients
+    w_out: int
+    bands_out: int             # true band count of the stem activation
+
+
+class CompiledBlock(NamedTuple):
+    """One residual block in the compiled schedule.
+
+    ``kind == "fused"`` executes through ``dispatch.fused_block`` (the
+    megakernel / its XLA twin) over packed operators; ``kind == "layers"``
+    keeps the per-layer dispatch walk (operators not materialised, or the
+    VMEM estimate exceeded the budget — ``CompiledPlan.meta`` records why).
+    ``w_in``/``w_out`` are packed per-channel widths; ``bands_in`` /
+    ``bands_out`` the true band counts (``bands_out`` is the residual-join
+    width: ``max(conv2.bands, shortcut bands)``).
+    """
+
+    kind: str
+    name: str
+    cin: int
+    cout: int
+    w_in: int
+    w_out: int
+    bands_in: int
+    bands_out: int
+    path: str                  # resolved execution path for fused steps
+    conv1: Any = None
+    asm_mid: Any = None
+    conv2: Any = None
+    proj: Any = None
+    asm_out: Any = None
+    ops: Any = None            # ConvOperator dict for the fallback walk
+    vmem_bytes: int = 0
+
+
+class CompiledPlan(NamedTuple):
+    """A static schedule of fused steps lowered from an ``InferencePlan``.
+
+    Closure-only, like the plan: close over it in a jitted lambda.  The
+    activations between steps live in the packed ``(N, bh, bw, C·w)``
+    layout — no 64-wide padding anywhere on the runtime path.
+    """
+
+    stem: CompiledStem
+    blocks: tuple
+    head_w: jnp.ndarray
+    head_b: jnp.ndarray
+    spec: resnetlib.ResNetSpec
+    phi: int
+    cfg: dispatchlib.DispatchConfig
+    bands: dict[str, int]
+    meta: Any = None
+
+    def __call__(self, coef: jnp.ndarray) -> jnp.ndarray:
+        return apply_compiled(self, coef)
+
+
+def compile_plan(plan: InferencePlan, *, vmem_budget: int = VMEM_BUDGET,
+                 image_size: int | None = None) -> CompiledPlan:
+    """Lower a plan into the fused static schedule.
+
+    Per residual block: pack conv1/conv2 (and the projection shortcut) at
+    their own sublane-aligned per-channel band widths; the executors fit
+    the activation between stages with elementwise lane slices/pads.
+    Blocks whose operators are factored (never materialised Ξ) or — on
+    the pallas path — whose VMEM estimate exceeds ``vmem_budget`` stay on
+    the per-layer walk.
+
+    ``image_size`` sizes the block grid the VMEM estimate assumes (the
+    megakernel holds one image's whole feature map per grid instance);
+    None falls back to the paper-canonical ``8·2^(stages-1)`` input that
+    ends at a single block.  Pass the real serving resolution when it
+    differs — an underestimated grid would admit Mosaic kernels that do
+    not fit.
+    """
+    from repro.kernels import fused_block as fblib
+    from repro.kernels import tiling
+
+    spec, phi, cfg = plan.spec, plan.phi, plan.cfg
+    path = dispatchlib.choose_path("fused_block", cfg)
+    if path not in dispatchlib.available_paths("fused_block"):
+        path = "reference"
+    meta: dict[str, Any] = {"fused": [], "layers": {}, "vmem": {},
+                            "budget": int(vmem_budget), "path": path}
+
+    st = plan.operators["stem"]
+    cout0 = st.kernel.shape[0]
+    cin0 = st.kernel.shape[1]
+    w0 = _r8(st.bands)
+    if st.xi is not None:
+        stem = CompiledStem(
+            "packed",
+            tiling.pack_conv(st.xi, st.shift, st.stride, w_in=w0, w_out=w0),
+            tiling.pack_asm(phi, st.bands, w0),
+            st, cin0, cout0, w0, w0, st.bands)
+    else:
+        stem = CompiledStem("layers", None, None, st, cin0, cout0,
+                            dctlib.NFREQ, w0, st.bands)
+        meta["layers"]["stem"] = "factored operator"
+
+    # block grid for the VMEM estimate: one block per 8 px at the stem,
+    # halving at each stride-2 stage
+    if image_size is None:
+        image_size = dctlib.BLOCK * 2 ** (len(spec.widths) - 1)
+    bh = max(1, image_size // dctlib.BLOCK)
+    cur_b, cur_w = stem.bands_out, stem.w_out
+    blocks = []
+    for name, s, cin, w in resnetlib._stages(spec):
+        entry = plan.operators[name]
+        c1, c2 = entry["conv1"], entry["conv2"]
+        pr = entry.get("proj")
+        short_b = pr.bands if pr is not None else cur_b
+        j_true = max(c2.bands, short_b)
+        convs = [c1, c2] + ([pr] if pr is not None else [])
+        materialized = all(op.xi is not None for op in convs)
+
+        blk = None
+        if materialized:
+            # every operand at its *own* true (sublane-rounded) band width
+            # — the fused executor fits the activation between stages with
+            # elementwise lane slices/pads, so a wide residual join never
+            # inflates a GEMM dimension.
+            w_in = cur_w
+            w_j = _r8(j_true)
+            w_mid = _r8(c1.bands)
+            p1 = tiling.pack_conv(c1.xi, c1.shift, c1.stride,
+                                  w_in=_r8(min(c1.bands, cur_b)),
+                                  w_out=w_mid)
+            a1 = tiling.pack_asm(phi, c1.bands, w_mid)
+            p2 = tiling.pack_conv(c2.xi, c2.shift, c2.stride,
+                                  w_in=_r8(min(c2.bands, c1.bands)),
+                                  w_out=_r8(c2.bands))
+            pp = None
+            if pr is not None:
+                pp = tiling.pack_conv(pr.xi, pr.shift, pr.stride,
+                                      w_in=_r8(min(pr.bands, cur_b)),
+                                      w_out=_r8(pr.bands))
+            a2 = tiling.pack_asm(phi, j_true, w_j)
+            vmem = fblib.fused_vmem_bytes(bh, bh, p1, a1, p2, a2, pp)
+            meta["vmem"][name] = int(vmem)
+            # The budget only gates the Mosaic kernel, whose operands must
+            # be VMEM-resident per instance; the XLA reference executor
+            # (also the off-TPU serving path) has no such limit.
+            if path != "pallas" or vmem <= vmem_budget:
+                blk = CompiledBlock("fused", name, cin, w, w_in, w_j,
+                                    cur_b, j_true, path, p1, a1, p2, pp, a2,
+                                    dict(entry), int(vmem))
+                meta["fused"].append(name)
+            else:
+                meta["layers"][name] = f"vmem {vmem} > budget {vmem_budget}"
+        else:
+            meta["layers"][name] = "factored operator"
+        if blk is None:
+            blk = CompiledBlock("layers", name, cin, w, cur_w, _r8(j_true),
+                                cur_b, j_true, path, ops=dict(entry))
+        blocks.append(blk)
+        cur_b, cur_w = blk.bands_out, blk.w_out
+        bh = max(1, bh // s)
+    return CompiledPlan(stem, tuple(blocks), plan.head_w, plan.head_b,
+                        spec, phi, cfg, dict(plan.bands), meta)
+
+
+def _repack_width(h: jnp.ndarray, c: int, w_to: int) -> jnp.ndarray:
+    """Move a packed activation between per-channel widths (block
+    boundaries only — the compiler chains widths so this is rare)."""
+    from repro.kernels.tiling import fit_width
+
+    return fit_width(h, c, w_to)
+
+
+def _apply_stem(stem: CompiledStem, coef: jnp.ndarray, phi: int, path: str,
+                cfg: dispatchlib.DispatchConfig) -> jnp.ndarray:
+    from repro.kernels import fused_block as fblib
+    from repro.kernels import tiling
+
+    n, bh, bw = coef.shape[:3]
+    if stem.kind == "packed":
+        if path == "pallas" and not dispatchlib._pallas_delegates(cfg):
+            h = coef[..., : stem.w_in].reshape(n, bh, bw,
+                                               stem.cin * stem.w_in)
+            h = tiling.packed_conv_apply(h, stem.conv)
+            return tiling.packed_asm_apply(h, stem.asm)
+        return fblib.fused_stem_spatial(coef, stem.op, phi, stem.w_out)
+    h = dispatchlib.apply_conv(coef, stem.op, cfg=cfg)
+    h = dispatchlib.asm_relu(h, phi, cfg=cfg, bands=stem.bands_out)
+    return h[..., : stem.w_out].reshape(n, bh, bw, stem.cout * stem.w_out)
+
+
+def _apply_layers_block(blk: CompiledBlock, h: jnp.ndarray, phi: int,
+                        cfg: dispatchlib.DispatchConfig) -> jnp.ndarray:
+    """Per-layer fallback: unpack to the 64-wide layout, run the exact
+    ``apply_plan`` block body, repack to the scheduled output width."""
+    from repro.core.conv import pad_bands
+
+    n, bh, bw, _ = h.shape
+    ops = blk.ops
+    s = ops["conv1"].stride
+    h64 = pad_bands(h.reshape(n, bh, bw, blk.cin, blk.w_in))
+    short, short_b = h64, blk.bands_in
+    if "proj" in ops:
+        short = dispatchlib.apply_conv(h64, ops["proj"], cfg=cfg)
+        short_b = ops["proj"].bands
+    x = dispatchlib.apply_conv(h64, ops["conv1"], cfg=cfg)
+    x = dispatchlib.asm_relu(x, phi, cfg=cfg, bands=ops["conv1"].bands)
+    x = dispatchlib.apply_conv(x, ops["conv2"], cfg=cfg)
+    x = poollib.residual_add(x, short)
+    x = dispatchlib.asm_relu(x, phi, cfg=cfg,
+                             bands=max(ops["conv2"].bands, short_b))
+    return x[..., : blk.w_out].reshape(n, bh // s, bw // s,
+                                       blk.cout * blk.w_out)
+
+
+def apply_compiled(cp: CompiledPlan, coef: jnp.ndarray,
+                   cfg: dispatchlib.DispatchConfig | None = None
+                   ) -> jnp.ndarray:
+    """Execute the compiled schedule: packed stem, then one fused (or
+    fallback) step per residual block, then the DC-read head.
+
+    Mathematically identical to :func:`apply_plan` on the source plan
+    (coefficients beyond each layer's band cutoff are zero in both
+    layouts); differs only in float summation order.
+    """
+    cfg = cp.cfg if cfg is None else cfg
+    path = (cp.meta or {}).get("path", "reference")
+    h = _apply_stem(cp.stem, coef, cp.phi, path, cfg)
+    cur_w = cp.stem.w_out
+    h = shard(h, "batch", None, None, None)
+    for blk in cp.blocks:
+        if blk.w_in != cur_w:
+            h = _repack_width(h, blk.cin, blk.w_in)
+        if blk.kind == "fused":
+            h = dispatchlib.fused_block(h, blk, cp.phi, path=blk.path,
+                                        cfg=cfg)
+        else:
+            h = _apply_layers_block(blk, h, cp.phi, cfg)
+        cur_w = blk.w_out
+        h = shard(h, "batch", None, None, None)
+    dc = h[..., 0::cur_w]  # per-channel DC lanes of the packed layout
+    pooled = jnp.mean(dc, axis=(1, 2)) / bnlib.DC_GAIN
+    return pooled @ cp.head_w + cp.head_b
+
+
+# --------------------------------------------------------------------------
 # Serialization through the checkpoint manager
 # --------------------------------------------------------------------------
 
-_OP_ARRAYS = ("xi", "kernel", "scale", "shift")
+_OP_ARRAYS = ("xi", "kernel", "scale", "shift", "bn_scale")
 _OP_STATIC = ("stride", "bands", "quality", "in_scaled", "out_scaled", "path")
-_PLAN_FORMAT = 1
+# format 2: operators additionally carry ``bn_scale`` (the retained BN fold
+# compile_plan re-lowers from) — format-1 artifacts predate compiled plans.
+_PLAN_FORMAT = 2
 
 
 def _flat_ops(plan: InferencePlan) -> dict[str, dispatchlib.ConvOperator]:
@@ -440,6 +733,25 @@ def _leaf_path(key: str) -> str:
     return "/".join(str(p) for p in path)
 
 
+def _op_save(key: str, op: dispatchlib.ConvOperator,
+             arrays: dict[str, np.ndarray]) -> dict[str, Any]:
+    meta: dict[str, Any] = {f: getattr(op, f) for f in _OP_STATIC}
+    for f in _OP_ARRAYS:
+        val = getattr(op, f)
+        meta[f"has_{f}"] = val is not None
+        if val is not None:
+            arrays[f"{key}.{f}"] = np.asarray(val)
+    return meta
+
+
+def _op_load(key: str, meta: dict[str, Any],
+             arr: Any) -> dispatchlib.ConvOperator:
+    fields = {f: meta[f] for f in _OP_STATIC}
+    for f in _OP_ARRAYS:
+        fields[f] = arr(f"{key}.{f}") if meta[f"has_{f}"] else None
+    return dispatchlib.ConvOperator(**fields)
+
+
 def save_plan(plan: InferencePlan, directory: str, step: int = 0,
               keep: int = 3) -> None:
     """Persist a plan: arrays through the checksummed/atomic checkpoint
@@ -450,12 +762,7 @@ def save_plan(plan: InferencePlan, directory: str, step: int = 0,
                                      "head.b": np.asarray(plan.head_b)}
     meta_ops: dict[str, dict[str, Any]] = {}
     for key, op in _flat_ops(plan).items():
-        meta_ops[key] = {f: getattr(op, f) for f in _OP_STATIC}
-        for f in _OP_ARRAYS:
-            val = getattr(op, f)
-            meta_ops[key][f"has_{f}"] = val is not None
-            if val is not None:
-                arrays[f"{key}.{f}"] = np.asarray(val)
+        meta_ops[key] = _op_save(key, op, arrays)
     extra = {
         "kind": "jpeg_inference_plan",
         "format": _PLAN_FORMAT,
@@ -491,10 +798,7 @@ def load_plan(directory: str, step: int | None = None) -> InferencePlan:
     cfg = dispatchlib.DispatchConfig(**extra["cfg"])
     operators: dict[str, Any] = {}
     for key, meta in extra["ops"].items():
-        fields = {f: meta[f] for f in _OP_STATIC}
-        for f in _OP_ARRAYS:
-            fields[f] = arr(f"{key}.{f}") if meta[f"has_{f}"] else None
-        op = dispatchlib.ConvOperator(**fields)
+        op = _op_load(key, meta, arr)
         if "/" in key:
             name, slot = key.split("/", 1)
             operators.setdefault(name, {})[slot] = op
@@ -504,3 +808,136 @@ def load_plan(directory: str, step: int | None = None) -> InferencePlan:
                          int(extra["phi"]), cfg,
                          {k: int(v) for k, v in extra["bands"].items()},
                          extra.get("provenance"))
+
+
+# --------------------------------------------------------------------------
+# Compiled-schedule serialization (packed-operator pytree)
+# --------------------------------------------------------------------------
+
+_COMPILED_FORMAT = 1
+_PC_STATIC = ("stride", "ndy", "ndx", "cin", "w_in", "cout", "w_out")
+_PA_STATIC = ("w", "bands", "phi")
+
+
+def save_compiled_plan(cp: CompiledPlan, directory: str, step: int = 0,
+                       keep: int = 3) -> None:
+    """Persist a compiled schedule: the packed buffers go through the
+    checksummed array store, the static schedule into ``extra`` — a
+    restore re-serves the exact buffers (bit-identical logits) with no
+    recompile."""
+    from repro.checkpoint import CheckpointManager
+
+    arrays: dict[str, np.ndarray] = {"head.w": np.asarray(cp.head_w),
+                                     "head.b": np.asarray(cp.head_b)}
+
+    def pc_save(prefix, pc):
+        arrays[f"{prefix}.xi"] = np.asarray(pc.xi)
+        arrays[f"{prefix}.shift"] = np.asarray(pc.shift)
+        return {f: int(getattr(pc, f)) for f in _PC_STATIC}
+
+    def pa_save(prefix, pa):
+        arrays[f"{prefix}.cat"] = np.asarray(pa.cat)
+        arrays[f"{prefix}.recon_t"] = np.asarray(pa.recon_t)
+        return {f: int(getattr(pa, f)) for f in _PA_STATIC}
+
+    stem = cp.stem
+    stem_meta: dict[str, Any] = {
+        "kind": stem.kind, "cin": stem.cin, "cout": stem.cout,
+        "w_in": stem.w_in, "w_out": stem.w_out, "bands_out": stem.bands_out}
+    stem_meta["op"] = _op_save("stem.op", stem.op, arrays)
+    if stem.kind == "packed":
+        stem_meta["conv"] = pc_save("stem.conv", stem.conv)
+        stem_meta["asm"] = pa_save("stem.asm", stem.asm)
+    blocks_meta = []
+    for blk in cp.blocks:
+        m: dict[str, Any] = {
+            "kind": blk.kind, "name": blk.name, "cin": blk.cin,
+            "cout": blk.cout, "w_in": blk.w_in, "w_out": blk.w_out,
+            "bands_in": blk.bands_in, "bands_out": blk.bands_out,
+            "path": blk.path, "vmem_bytes": blk.vmem_bytes}
+        m["ops"] = {slot: _op_save(f"{blk.name}.ops.{slot}", op, arrays)
+                    for slot, op in blk.ops.items()}
+        if blk.kind == "fused":
+            m["conv1"] = pc_save(f"{blk.name}.conv1", blk.conv1)
+            m["asm_mid"] = pa_save(f"{blk.name}.asm_mid", blk.asm_mid)
+            m["conv2"] = pc_save(f"{blk.name}.conv2", blk.conv2)
+            if blk.proj is not None:
+                m["proj"] = pc_save(f"{blk.name}.proj", blk.proj)
+            m["asm_out"] = pa_save(f"{blk.name}.asm_out", blk.asm_out)
+        blocks_meta.append(m)
+    extra = {
+        "kind": "jpeg_compiled_plan",
+        "format": _COMPILED_FORMAT,
+        "spec": dict(cp.spec._asdict(), widths=list(cp.spec.widths)),
+        "phi": cp.phi,
+        "cfg": dataclasses.asdict(cp.cfg),
+        "bands": cp.bands,
+        "meta": cp.meta,
+        "stem": stem_meta,
+        "blocks": blocks_meta,
+    }
+    CheckpointManager(directory, keep=keep).save(step, arrays, extra=extra)
+
+
+def load_compiled_plan(directory: str, step: int | None = None
+                       ) -> CompiledPlan:
+    """Restore a :class:`CompiledPlan` saved by :func:`save_compiled_plan`
+    (bit-exact: the packed buffers round-trip through the array store)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.kernels.tiling import PackedAsm, PackedConv
+
+    _, by_path, extra = CheckpointManager(directory).restore_tree(step)
+    if extra.get("kind") != "jpeg_compiled_plan":
+        raise ValueError(f"{directory} does not hold a compiled plan")
+    if extra.get("format") != _COMPILED_FORMAT:
+        raise ValueError(
+            f"unsupported compiled-plan format {extra.get('format')!r}")
+
+    def arr(key):
+        return jnp.asarray(by_path[_leaf_path(key)])
+
+    def pc_load(prefix, meta):
+        return PackedConv(arr(f"{prefix}.xi"), arr(f"{prefix}.shift"),
+                          **{f: int(meta[f]) for f in _PC_STATIC})
+
+    def pa_load(prefix, meta):
+        return PackedAsm(arr(f"{prefix}.cat"), arr(f"{prefix}.recon_t"),
+                         **{f: int(meta[f]) for f in _PA_STATIC})
+
+    sm = extra["stem"]
+    stem_op = _op_load("stem.op", sm["op"], arr)
+    if sm["kind"] == "packed":
+        stem = CompiledStem("packed", pc_load("stem.conv", sm["conv"]),
+                            pa_load("stem.asm", sm["asm"]), stem_op,
+                            int(sm["cin"]), int(sm["cout"]),
+                            int(sm["w_in"]), int(sm["w_out"]),
+                            int(sm["bands_out"]))
+    else:
+        stem = CompiledStem("layers", None, None, stem_op,
+                            int(sm["cin"]), int(sm["cout"]),
+                            int(sm["w_in"]), int(sm["w_out"]),
+                            int(sm["bands_out"]))
+    blocks = []
+    for m in extra["blocks"]:
+        common = (m["kind"], m["name"], int(m["cin"]), int(m["cout"]),
+                  int(m["w_in"]), int(m["w_out"]), int(m["bands_in"]),
+                  int(m["bands_out"]), m["path"])
+        ops = {slot: _op_load(f"{m['name']}.ops.{slot}", om, arr)
+               for slot, om in m["ops"].items()}
+        if m["kind"] == "fused":
+            name = m["name"]
+            proj = pc_load(f"{name}.proj", m["proj"]) if "proj" in m else None
+            blocks.append(CompiledBlock(
+                *common, pc_load(f"{name}.conv1", m["conv1"]),
+                pa_load(f"{name}.asm_mid", m["asm_mid"]),
+                pc_load(f"{name}.conv2", m["conv2"]), proj,
+                pa_load(f"{name}.asm_out", m["asm_out"]), ops,
+                int(m["vmem_bytes"])))
+        else:
+            blocks.append(CompiledBlock(*common, ops=ops))
+    spec_d = dict(extra["spec"], widths=tuple(extra["spec"]["widths"]))
+    return CompiledPlan(stem, tuple(blocks), arr("head.w"), arr("head.b"),
+                        resnetlib.ResNetSpec(**spec_d), int(extra["phi"]),
+                        dispatchlib.DispatchConfig(**extra["cfg"]),
+                        {k: int(v) for k, v in extra["bands"].items()},
+                        extra.get("meta"))

@@ -41,6 +41,7 @@ __all__ = [
     "jpeg_apply",
     "precompute_operators",
     "jpeg_apply_precomputed",
+    "compile_for_inference",
 ]
 
 
@@ -241,3 +242,18 @@ def jpeg_apply_precomputed(params, state, ops, coef, *, spec: ResNetSpec,
 
     return planlib.apply_operators(params, state, ops, coef, spec=spec,
                                    phi=phi, cfg=dispatch)
+
+
+def compile_for_inference(params, state, spec: ResNetSpec, *,
+                          dispatch: dispatchlib.DispatchConfig | None = None,
+                          bands=None, probe_coef=None, **compile_kw):
+    """One call from trained parameters to the compiled serving schedule:
+    ``plan.build_plan`` (fused BN, per-layer bands) followed by
+    ``plan.compile_plan`` (fused residual-block megakernels over
+    tile-packed operators).  Returns the :class:`repro.core.plan.
+    CompiledPlan`; close over it in a jitted lambda to serve."""
+    from repro.core import plan as planlib
+
+    plan = planlib.build_plan(params, state, spec, dispatch=dispatch,
+                              bands=bands, probe_coef=probe_coef)
+    return planlib.compile_plan(plan, **compile_kw)

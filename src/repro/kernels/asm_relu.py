@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import dct as dctlib
+from repro.kernels.tiling import pick_tile
 
 __all__ = ["asm_relu_pallas", "TILE_BLOCKS"]
 
@@ -50,7 +51,10 @@ def asm_relu_pallas(coef: jnp.ndarray, phi: int = 14, *,
     kernel body on CPU for validation; on TPU pass ``interpret=False``.
     """
     n, nf = coef.shape
-    tile = min(TILE_BLOCKS, n)
+    # Tile picked *from n* (balanced, sublane-aligned — kernels.tiling):
+    # a serve-time single-image request runs one right-sized tile instead
+    # of padding up to TILE_BLOCKS and wasting the VPU on zeros.
+    tile = pick_tile(n, TILE_BLOCKS)
     if n % tile:
         pad = tile - n % tile
         coef = jnp.pad(coef, ((0, pad), (0, 0)))

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.conv import _offsets_from
+from repro.kernels.tiling import round_up
 
 __all__ = ["jpeg_conv_pallas", "CH_TILE"]
 
@@ -84,12 +85,12 @@ def jpeg_conv_pallas(coef: jnp.ndarray, xi: jnp.ndarray, stride: int = 1, *,
     tci = min(CH_TILE, ci_full)
     tco = min(CH_TILE, co_full)
     if ci_full % tci:
-        p = tci - ci_full % tci
+        p = round_up(ci_full, tci) - ci_full
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, p)))
         w = jnp.pad(w, ((0, 0), (0, 0), (0, p), (0, 0)))
         ci_full += p
     if co_full % tco:
-        p = tco - co_full % tco
+        p = round_up(co_full, tco) - co_full
         w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, p)))
     co_pad = w.shape[-1]
     bw_pad = x.shape[2]

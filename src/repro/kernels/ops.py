@@ -13,10 +13,11 @@ from repro.core.conv import pad_bands
 from repro.kernels.asm_relu import asm_relu_pallas
 from repro.kernels.block_dct import block_dct_pallas, block_idct_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_block import fused_block_pallas
 from repro.kernels.jpeg_conv import jpeg_conv_pallas
 
 __all__ = ["interpret_default", "asm_relu", "block_dct", "block_idct",
-           "jpeg_conv_apply", "flash_attention"]
+           "jpeg_conv_apply", "fused_block", "flash_attention"]
 
 
 def interpret_default() -> bool:
@@ -58,6 +59,14 @@ def jpeg_conv_apply(coef: jnp.ndarray, xi: jnp.ndarray,
                     stride: int = 1) -> jnp.ndarray:
     """Pallas twin of ``core.conv.apply_exploded``."""
     return jpeg_conv_pallas(coef, xi, stride, interpret=interpret_default())
+
+
+def fused_block(x: jnp.ndarray, conv1, asm_mid, conv2, asm_out,
+                proj=None) -> jnp.ndarray:
+    """One fused residual block over tile-packed operators
+    (``kernels.fused_block``); ``x`` is ``(N, bh, bw, Cin·w_in)``."""
+    return fused_block_pallas(x, conv1, asm_mid, conv2, asm_out, proj,
+                              interpret=interpret_default())
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -1,0 +1,221 @@
+"""Shared tiling + operator-packing helpers for the Pallas kernels.
+
+Extracted from ``jpeg_conv.py`` / ``asm_relu.py`` so the fused residual-block
+kernel (``fused_block.py``) and the per-layer kernels agree on one set of
+layout rules:
+
+* ``round_up`` / ``pick_tile`` — sublane-aligned tile selection.  The row
+  tile is picked *from the input size* (balanced over ``ceil(n / max_tile)``
+  tiles) instead of always padding up to the maximum tile, so a serve-time
+  single-image request does not burn VPU cycles on >90% padding.
+* ``PackedConv`` / ``PackedAsm`` — build-time **tile-packed** banded
+  operators.  A band-truncated Ξ ``(ndy, ndx, Cin, b, Cout, b')`` is padded
+  once to sublane-aligned per-channel widths and concatenated over block
+  offsets into one contiguous ``(ndy·ndx, Cin·w_in, Cout·w_out)`` buffer;
+  the ASM ReLU matrices are packed to the same widths with the mask and
+  reconstruction operands concatenated into a single ``(w, 128)`` lane-wide
+  operand.  The runtime path then does *zero* reshaping or band fix-ups:
+  every step is a dense 2-D GEMM over the packed layout (coefficients
+  beyond a layer's band cutoff are zero rows/columns baked in here).
+* ``conv_slices`` / ``packed_conv_apply`` / ``packed_asm_apply`` — the
+  XLA reference executors over the packed layout (one im2col-style GEMM
+  per convolution instead of ``ndy·ndx`` separate einsums; also the
+  off-TPU perf path the Pallas kernels delegate to).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import asm as asmlib
+from repro.core import dct as dctlib
+from repro.core.conv import _offsets_from
+
+__all__ = [
+    "LANE", "SUBLANE", "round_up", "pick_tile",
+    "PackedConv", "PackedAsm", "pack_conv", "pack_asm",
+    "conv_slices", "packed_conv_apply", "packed_asm_apply", "fit_width",
+]
+
+#: TPU vector lane count — the last axis of a VMEM tile.
+LANE = 128
+#: float32 sublane count — the second-to-last axis of a VMEM tile.
+SUBLANE = 8
+
+
+def round_up(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is ≥ ``n``."""
+    return -(-n // m) * m
+
+
+def pick_tile(n: int, max_tile: int, align: int = SUBLANE) -> int:
+    """Sublane-aligned row tile for ``n`` rows, balanced across tiles.
+
+    ``ceil(n / max_tile)`` tiles are used and the tile size is the aligned
+    per-tile share, so small inputs get a tile sized to *them* (a single
+    64-row image request runs one 64-row tile, not a padded ``max_tile``
+    one) and sizes just past a tile boundary split evenly instead of
+    paying a nearly-empty trailing tile.
+    """
+    if n <= 0:
+        raise ValueError(f"need at least one row, got {n}")
+    num = -(-n // max_tile)
+    return min(round_up(-(-n // num), align), round_up(max_tile, align))
+
+
+# --------------------------------------------------------------------------
+# Build-time packed operators
+# --------------------------------------------------------------------------
+
+
+class PackedConv(NamedTuple):
+    """A band-truncated conv operator packed for tile-aligned execution.
+
+    ``xi`` is ``(ndy·ndx, Cin·w_in, Cout·w_out)`` — per-block-offset Ξ
+    slices flattened to 2-D GEMM operands and concatenated into one
+    contiguous buffer; ``shift`` is a ``(1, Cout·w_out)`` row carrying the
+    folded batch-norm DC shift (zeros off the per-channel DC slots) so the
+    epilogue is a plain broadcast add.  ``w_in``/``w_out`` are the
+    *padded* per-channel coefficient widths; rows/columns beyond the true
+    band counts are zero, baked in at pack time.
+    """
+
+    xi: jnp.ndarray
+    shift: jnp.ndarray
+    stride: int
+    ndy: int
+    ndx: int
+    cin: int
+    w_in: int
+    cout: int
+    w_out: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.xi.size + self.shift.size) * self.xi.dtype.itemsize
+
+
+class PackedAsm(NamedTuple):
+    """ASM ReLU operands packed to a per-channel width ``w``.
+
+    ``cat`` is ``(w, 2·64)``: the φ-truncated mask reconstruction in lanes
+    ``[:64]`` and the exact reconstruction in lanes ``[64:]`` — one
+    lane-wide GEMM produces both the mask pre-activation and the spatial
+    values.  ``recon_t`` is ``(64, w)`` back to (padded) coefficients.
+    Rows/columns beyond the true band count are zero.
+    """
+
+    cat: jnp.ndarray
+    recon_t: jnp.ndarray
+    w: int
+    bands: int
+    phi: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.cat.size + self.recon_t.size) * self.cat.dtype.itemsize
+
+
+def pack_conv(xi, shift, stride: int, *, w_in: int, w_out: int,
+              dtype=jnp.float32) -> PackedConv:
+    """Pack an exploded operator ``(ndy, ndx, Cin, b, Cout, b')`` plus an
+    optional DC ``shift`` (per output channel) into a :class:`PackedConv`.
+
+    ``w_in``/``w_out`` are the target padded per-channel widths; the true
+    band axes are cropped to ``min(b, w)`` (coefficients the consumer would
+    slice away anyway are dropped here, at build time).
+    """
+    xi = np.asarray(xi)
+    ndy, ndx, cin, b_in, cout, b_out = xi.shape
+    k_in, k_out = min(b_in, w_in), min(b_out, w_out)
+    packed = np.zeros((ndy * ndx, cin, w_in, cout, w_out), np.float32)
+    packed[:, :, :k_in, :, :k_out] = xi.reshape(
+        ndy * ndx, cin, b_in, cout, b_out)[:, :, :k_in, :, :k_out]
+    packed = packed.reshape(ndy * ndx, cin * w_in, cout * w_out)
+    row = np.zeros((1, cout * w_out), np.float32)
+    if shift is not None:
+        row[0, np.arange(cout) * w_out] = np.asarray(shift)
+    return PackedConv(jnp.asarray(packed, dtype), jnp.asarray(row, dtype),
+                      stride, ndy, ndx, cin, w_in, cout, w_out)
+
+
+def pack_asm(phi: int, bands: int, w: int, dtype=jnp.float32) -> PackedAsm:
+    """Pack the ASM ReLU matrices at band count ``bands``, padded to ``w``."""
+    c = asmlib.asm_constants(phi, bands=bands)
+    cat = np.zeros((w, 2 * dctlib.NFREQ), np.float32)
+    cat[:bands, : dctlib.NFREQ] = c.recon_phi
+    cat[:bands, dctlib.NFREQ:] = c.recon
+    rt = np.zeros((dctlib.NFREQ, w), np.float32)
+    rt[:, :bands] = c.recon_t
+    return PackedAsm(jnp.asarray(cat, dtype), jnp.asarray(rt, dtype),
+                     w, bands, phi)
+
+
+# --------------------------------------------------------------------------
+# Reference executors over the packed layout (XLA; also the off-TPU path)
+# --------------------------------------------------------------------------
+
+
+def conv_slices(x: jnp.ndarray, stride: int, ndy: int, ndx: int) -> jnp.ndarray:
+    """im2col over block offsets: ``(N, bh, bw, K)`` → ``(N, bh/s, bw/s,
+    ndy·ndx·K)`` with the offset-major layout :func:`pack_conv` uses."""
+    n, bh, bw, k = x.shape
+    d_min_y, _ = _offsets_from(ndy, stride)
+    d_min_x, _ = _offsets_from(ndx, stride)
+    bh_o, bw_o = bh // stride, bw // stride
+    pad_y = (-d_min_y, ndy - 1 + d_min_y)
+    pad_x = (-d_min_x, ndx - 1 + d_min_x)
+    padded = jnp.pad(x, ((0, 0), pad_y, pad_x, (0, 0)))
+    parts = []
+    for iy in range(ndy):
+        for ix in range(ndx):
+            parts.append(padded[:, iy: iy + stride * bh_o: stride,
+                                ix: ix + stride * bw_o: stride])
+    return jnp.concatenate(parts, axis=-1)
+
+
+def packed_conv_apply(h: jnp.ndarray, pc: PackedConv) -> jnp.ndarray:
+    """One GEMM per layer: gather offset slices, multiply the packed Ξ."""
+    n, bh, bw, _ = h.shape
+    cat = conv_slices(h, pc.stride, pc.ndy, pc.ndx)
+    noff, k, m = pc.xi.shape
+    out = cat.reshape(-1, noff * k) @ pc.xi.reshape(noff * k, m)
+    return out.reshape(n, bh // pc.stride, bw // pc.stride, m) + pc.shift
+
+
+def fit_width(h: jnp.ndarray, c: int, w_to: int) -> jnp.ndarray:
+    """Adapt a packed ``(..., c·w)`` activation to per-channel width
+    ``w_to`` (slice or zero-pad each channel's coefficient lanes).
+
+    No-op when the widths already match — the plan compiler packs each
+    operator at its true band width, so this is the only runtime band
+    bookkeeping left, and it is elementwise (never inflates a GEMM).
+    Narrowing drops lanes that are zero or about to be truncated by the
+    consumer's band cutoff; widening inserts zero lanes.
+    """
+    w_from = h.shape[-1] // c
+    if w_from == w_to:
+        return h
+    lead = h.shape[:-1]
+    t = h.reshape(*lead, c, w_from)
+    if w_to < w_from:
+        t = t[..., :w_to]
+    else:
+        t = jnp.pad(t, [(0, 0)] * (t.ndim - 1) + [(0, w_to - w_from)])
+    return t.reshape(*lead, c * w_to)
+
+
+def packed_asm_apply(h: jnp.ndarray, pa: PackedAsm) -> jnp.ndarray:
+    """ASM ReLU over a packed ``(..., C·w)`` activation.
+
+    The trailing reshape to ``(rows·C, w)`` is a row-major view (channels
+    are blocks of ``w`` lanes) — no data movement.
+    """
+    shape = h.shape
+    t = h.reshape(-1, pa.w)
+    both = t @ pa.cat
+    nf = dctlib.NFREQ
+    masked = jnp.where(both[:, :nf] > 0, both[:, nf:], 0.0)
+    return (masked @ pa.recon_t).reshape(shape)

@@ -14,9 +14,14 @@ batch norm, per-layer autotuned bands, apply paths resolved at build time
 — and never calls ``precompute_operators`` (let alone re-explodes Ξ) at
 serve time.  When the directory holds no usable plan, one is built once,
 saved through the checkpoint manager, and *re-loaded from disk* so every
-serve run exercises the restore path.  Requests then run through the same
-slot pool as the LM driver: each request classifies a random number of
-images, finished slots are refilled from the pending queue.
+serve run exercises the restore path.  By default the forward runs the
+**compiled schedule** (``core.plan.compile_plan``: fused residual-block
+steps over tile-packed banded operators, restored from the plan dir's
+``compiled/`` subdirectory and compiled+saved whenever the plan itself is
+built); ``--no-compiled`` falls back to the per-layer plan walk.  Requests
+then run through the same slot pool as the LM driver: each request
+classifies a random number of images, finished slots are refilled from the
+pending queue.
 
 CPU example:
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
@@ -92,10 +97,14 @@ def prepare_plan(args, cfg, dcfg):
     """Restore the serving plan from ``--plan-dir``, building it first only
     when the directory holds no compatible plan.
 
-    Returns ``(plan, info)`` where the plan always comes from a *disk
-    restore* — a fresh build is saved and re-loaded, so the
+    Returns ``(plan, compiled, info)`` where the plan always comes from a
+    *disk restore* — a fresh build is saved and re-loaded, so the
     save → CheckpointManager → load round trip is on the serve path by
-    construction.
+    construction.  ``compiled`` is the fused static schedule
+    (``core.plan.CompiledPlan``) restored from the plan dir's ``compiled/``
+    subdirectory: built+saved alongside a fresh plan (and on explicit
+    ``--compiled``); ``--no-compiled`` serves the per-layer plan walk, and
+    the default uses a compiled schedule whenever the directory holds one.
     """
     from repro.core import plan as planlib
     from repro.core import resnet as R
@@ -103,6 +112,7 @@ def prepare_plan(args, cfg, dcfg):
 
     spec = jpeg_resnet_spec(cfg)
     autotune = getattr(args, "autotune_bands", False)
+    want_compiled = getattr(args, "compiled", None)
     plan_dir = args.plan_dir or os.path.join("plans", cfg.name)
     plan, built = None, False
     try:
@@ -132,8 +142,38 @@ def prepare_plan(args, cfg, dcfg):
                                   bands=bands, probe_coef=probe)
         planlib.save_plan(plan, plan_dir)
         plan = planlib.load_plan(plan_dir)  # serve from the restored artifact
-    return plan, {"dir": plan_dir, "built": built, "bands": plan.bands,
-                  "path": plan.cfg.path, "fused_bn": True}
+
+    compiled = None
+    compiled_dir = os.path.join(plan_dir, "compiled")
+    if want_compiled is not False:
+        had_artifact = False
+        if not built:
+            try:
+                compiled = planlib.load_compiled_plan(compiled_dir)
+                had_artifact = True
+                if compiled.spec != plan.spec or compiled.bands != plan.bands:
+                    compiled = None  # stale schedule for a different plan
+            except FileNotFoundError:
+                pass
+            except (ValueError, KeyError):
+                had_artifact = True  # unreadable/foreign — recompile below
+        if compiled is None and (built or want_compiled or had_artifact):
+            # convert-once: a fresh plan gets its schedule compiled, saved,
+            # and re-restored in the same pass; a stale or corrupt schedule
+            # is recompiled rather than silently serving the per-layer walk
+            planlib.save_compiled_plan(
+                planlib.compile_plan(plan, image_size=cfg.image_size),
+                compiled_dir)
+            compiled = planlib.load_compiled_plan(compiled_dir)
+    info = {"dir": plan_dir, "built": built, "bands": plan.bands,
+            "path": plan.cfg.path, "fused_bn": True,
+            "compiled": compiled is not None}
+    if compiled is not None:
+        meta = compiled.meta or {}
+        info["fused_blocks"] = list(meta.get("fused", []))
+        # "steps", not "blocks": a factored stem lands here too
+        info["fallback_steps"] = sorted(meta.get("layers", {}))
+    return plan, compiled, info
 
 
 def serve_jpeg_resnet(args) -> dict:
@@ -152,9 +192,19 @@ def serve_jpeg_resnet(args) -> dict:
         changes["bands"] = args.bands
     dcfg = dispatchlib.configure(**changes)
     cfg = reduced_config("jpeg-resnet") if args.reduced else get_config("jpeg-resnet")
-    plan, plan_info = prepare_plan(args, cfg, dcfg)
+    plan, compiled, plan_info = prepare_plan(args, cfg, dcfg)
 
-    fwd = jax.jit(lambda c: planlib.apply_plan(plan, c))
+    if compiled is not None:
+        meta = compiled.meta or {}
+        fused = meta.get("fused", [])
+        fallback = sorted(meta.get("layers", {}))
+        print(f"[serve] compiled schedule: {len(fused)} blocks fused "
+              f"({','.join(fused) or '-'}), {len(fallback)} steps per-layer "
+              f"({','.join(fallback) or '-'})")
+        fwd = jax.jit(lambda c: planlib.apply_compiled(compiled, c))
+    else:
+        print("[serve] per-layer plan execution (no compiled schedule)")
+        fwd = jax.jit(lambda c: planlib.apply_plan(plan, c))
     it = jpeg_iterator(args.seed, args.batch, cfg.image_size,
                        cfg.in_channels, cfg.num_classes)
     # warmup/compile
@@ -223,6 +273,13 @@ def main() -> None:
                     help="when building the plan, pick per-layer bands "
                          "from the quantization table + a parity sweep "
                          "instead of the global knob")
+    ap.add_argument("--compiled", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="serve the compiled fused-block schedule "
+                         "(plan.compile_plan).  Default: on when the plan "
+                         "dir holds a compiled schedule (one is compiled "
+                         "and saved whenever the plan itself is built); "
+                         "--no-compiled forces the per-layer plan walk")
     args = ap.parse_args()
     if args.arch == "jpeg-resnet":
         serve_jpeg_resnet(args)
