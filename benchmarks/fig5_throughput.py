@@ -17,6 +17,11 @@ Modes (``--modes``, default all):
   residual-block steps over tile-packed banded operators, measured against
   the per-layer plan walk at the *same* band assignment — the serving
   configuration;
+* ``ingest``   — **bytes → logits**: real baseline JPEG bytes through the
+  ``repro.codec`` subsystem (entropy decode + per-image quantization
+  normalization, never pixels) into the plan walk / the compiled
+  schedule's tile-packed stem, vs the spatial route that must decompress
+  first — the paper's end-to-end serving claim, measured from the wire;
 * ``train``    — one SGD step, both domains.
 
 Every row lands in ``BENCH_fig5.json`` tagged with its mode, alongside the
@@ -50,7 +55,7 @@ from repro.data.synthetic import image_batch
 
 BATCH = 40  # the paper's batch size
 SPEC = R.ResNetSpec(widths=(8, 12, 16), num_classes=10)
-ALL_MODES = ("spatial", "dispatch", "plan", "compiled", "train")
+ALL_MODES = ("spatial", "dispatch", "plan", "compiled", "ingest", "train")
 DEFAULT_OUT = "BENCH_fig5.json"
 
 
@@ -93,6 +98,9 @@ def run(emit, *, reduced: bool = False, modes=ALL_MODES,
         _run_dispatch(record, params, state, coef, batch, iters)
     if "plan" in modes or "compiled" in modes:
         _run_plan(record, params, state, coef, batch, iters, modes, mode_tag)
+    if "ingest" in modes:
+        mode_tag[0] = "ingest"
+        _run_ingest(record, params, state, coef, batch, iters)
     if "train" in modes:
         mode_tag[0] = "train"
         _run_train(record, params, state, coef, y, batch)
@@ -232,6 +240,103 @@ def _run_plan(emit, params, state, coef, batch, iters, modes, mode_tag):
         emit("fig5/infer_speedup_compiled", 0.0,
              f"{t_plan / t_comp:.2f}x over plan walk (fused blocks, packed "
              f"operators, top1_agree={agree:.3f})", speedup=t_plan / t_comp)
+
+
+def _run_ingest(emit, params, state, coef, batch, iters):
+    # ---- bytes → logits: the compressed-ingest serving path ---------------
+    # The batch is entropy-encoded to *real* baseline JFIF bytes at a mixed
+    # quality rotation (per-image quantization tables, like live traffic);
+    # each timed call re-runs the full host ingest (entropy decode +
+    # normalization in repro.codec) plus the device forward.  The spatial
+    # route pays the same entropy decode *and* a spatial decompression —
+    # exactly the paper's "skip the decompression step" comparison, but
+    # measured from the wire.
+    from repro import codec
+    from repro.core import dct as dctlib
+    from repro.data.synthetic import image_batch
+
+    iters = max(iters, 3)
+    d = image_batch(0, 0, batch, 32, 3, 10)
+    qualities = (35, 50, 75, 90)
+    datas = []
+    for i, img in enumerate(d["images"]):
+        qt = np.rint(dctlib.quantization_table(
+            qualities[i % len(qualities)], dc_is_mean=False)).astype(np.int64)
+        datas.append(codec.encode_pixels(
+            np.clip(img, -1.0, 127.0 / 128.0), qtable=qt))
+    n_bytes = sum(len(x) for x in datas)
+    grid = (32 // dctlib.BLOCK, 32 // dctlib.BLOCK)
+
+    def ingest(pack_width=None):
+        return codec.ingest_batch(datas, quality=SPEC.quality, grid=grid,
+                                  channels=3, pack_width=pack_width,
+                                  with_stats=False)[0]
+
+    # plan autotuned from the byte traffic's own energy profile
+    full, stats = codec.ingest_batch(datas, quality=SPEC.quality, grid=grid,
+                                     channels=3)
+    base_cfg = DSP.DispatchConfig(path="reference", bands=64)
+    probe = jnp.asarray(full[:4])
+    plan = PL.build_plan(params, state, SPEC, dispatch=base_cfg,
+                         bands="auto", probe_coef=probe,
+                         profile=stats.energy, occupancy=stats.occupancy)
+    cp = PL.compile_plan(plan)
+    plan_fn = jax.jit(lambda c: PL.apply_plan(plan, c))
+    comp_fn = jax.jit(lambda c: PL.apply_compiled_packed(cp, c))
+    pack_w = cp.stem.w_in
+
+    def sp_fwd(c):
+        img = J.jpeg_decode(jnp.moveaxis(c, 3, 1), quality=SPEC.quality,
+                            scaled=True)
+        return R.spatial_apply(params, state, img, training=False,
+                               spec=SPEC)[0]
+
+    sp_fn = jax.jit(sp_fwd)
+
+    def bytes_decode():
+        return ingest(pack_width=pack_w)
+
+    def bytes_walk():
+        return plan_fn(jnp.asarray(ingest()))
+
+    def bytes_compiled():
+        return comp_fn(jnp.asarray(ingest(pack_width=pack_w)))
+
+    def bytes_spatial():
+        return sp_fn(jnp.asarray(ingest()))
+
+    t_dec = time_fn(bytes_decode, iters=iters)
+    mb_s = n_bytes / (t_dec / 1e6) / 2**20
+    emit("fig5/ingest_decode_only", t_dec,
+         f"img_per_s={batch / (t_dec / 1e6):.1f} mb_per_s={mb_s:.2f} "
+         f"nonzero_per_block={stats.mean_nonzero:.1f}")
+
+    t_walk, t_comp = time_pair(bytes_walk, bytes_compiled, iters=iters)
+    t_sp, t_comp2 = time_pair(bytes_spatial, bytes_compiled, iters=iters)
+    agree = float(np.mean(np.asarray(bytes_compiled()).argmax(-1)
+                          == np.asarray(bytes_walk()).argmax(-1)))
+    bands = sorted(set(plan.bands.values()))
+    emit("fig5/ingest_plan_walk", t_walk,
+         f"img_per_s={batch / (t_walk / 1e6):.1f}")
+    emit("fig5/ingest_compiled", t_comp,
+         f"img_per_s={batch / (t_comp / 1e6):.1f} top1_agree={agree:.3f} "
+         f"bands={'/'.join(map(str, bands))} pack_w={pack_w}")
+    emit("fig5/ingest_spatial_decompress", t_sp,
+         f"img_per_s={batch / (t_sp / 1e6):.1f}")
+    # the guarded row: both sides share the identical host entropy decode
+    # and differ only in the network path, so the ratio is stable enough
+    # for the CI perf guard
+    emit("fig5/infer_speedup_ingest_compiled", 0.0,
+         f"{t_walk / t_comp:.2f}x bytes->logits over plan walk "
+         f"(tile-packed ingest, top1_agree={agree:.3f})",
+         speedup=t_walk / t_comp)
+    # informational only (prefix deliberately outside the guard's
+    # fig5/infer_speedup_ match): on the reduced config the host decode
+    # dominates both routes and the tiny spatial net is cheap, so this
+    # ratio mostly measures the decoder, not the paper's full-scale claim
+    emit("fig5/ingest_speedup_vs_spatial", 0.0,
+         f"{t_sp / t_comp2:.2f}x bytes->logits over spatial decompress+"
+         f"classify", speedup=t_sp / t_comp2)
 
 
 def _run_train(emit, params, state, coef, y, batch):

@@ -1,0 +1,29 @@
+"""Compressed-ingest codec: real JPEG bytes → the compiled plan.
+
+The paper's "consume compressed images as input" made real: a baseline
+JFIF parser + vectorized numpy Huffman entropy decoder
+(:mod:`~repro.codec.bitstream`), the matching bit-exact entropy encoder
+(:mod:`~repro.codec.encode`), per-image quantization-table normalization
+with coefficient-domain chroma upsampling (:mod:`~repro.codec.normalize`),
+and batched ingest into the plan / tile-packed layouts with empirical
+band statistics (:mod:`~repro.codec.ingest`).  Numpy-pure — no jax, no
+pixels, no external codec libraries.
+"""
+from repro.codec.bitstream import (  # noqa: F401
+    DecodedJpeg, JpegError, UnsupportedJpegError, decode_jpeg,
+)
+from repro.codec.encode import (  # noqa: F401
+    encode_baseline, encode_pixels, quantize_pixels,
+)
+from repro.codec.normalize import normalize_image  # noqa: F401
+from repro.codec.ingest import (  # noqa: F401
+    IngestStats, decode_bytes, ingest_batch, merge_stats, pack_tiles,
+)
+
+__all__ = [
+    "DecodedJpeg", "JpegError", "UnsupportedJpegError", "decode_jpeg",
+    "encode_baseline", "encode_pixels", "quantize_pixels",
+    "normalize_image",
+    "IngestStats", "decode_bytes", "ingest_batch", "merge_stats",
+    "pack_tiles",
+]

@@ -1,0 +1,493 @@
+"""Baseline JFIF bitstream parser + numpy Huffman entropy decoder.
+
+This is the ingest half of the compressed-domain serving story: raw JPEG
+bytes go to **quantized zigzag coefficients** — the file's own step-5
+integers — without ever materialising pixels.  ``codec.normalize`` then
+rescales them into the network's canonical quantization-table convention
+and ``codec.ingest`` packs batches for the compiled plan.
+
+Scope: baseline sequential DCT (SOF0), 8-bit precision, Huffman entropy
+coding, optional restart intervals — i.e. the JFIF files libjpeg emits by
+default.  Progressive (SOF2) and arithmetic coding raise
+:class:`UnsupportedJpegError` loudly rather than mis-decoding.
+
+Decoder shape
+-------------
+The entropy decode is structured for numpy rather than per-bit python:
+
+* each entropy-coded segment is byte-unstuffed **vectorially** (drop the
+  ``0x00`` after every ``0xFF``);
+* a 24-bit window array over the unstuffed bytes is precomputed in one
+  vector pass (8 bytes per input byte — never a per-bit expansion), so
+  peeking the next 16 bits at any bit position is one index + shift;
+* per Huffman table a flat 2¹⁶ lookup table maps the next 16 bits to
+  ``(symbol, code length)`` — the canonical-code walk of spec §F.16
+  collapses to ``lut[peek]``, and RECEIVE of ``s`` value bits is the
+  same peek shifted.
+
+Only the MCU walk itself (a few symbols per block) remains a python loop.
+
+Coefficients come out in **zigzag order** (the file's native order, which
+is also the repo-wide convention — ``core.dct.zigzag_permutation``), with
+the DC prediction already undone, one ``(blocks_y, blocks_x, 64)`` int32
+array per component on that component's own (MCU-padded) sampling grid.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import dct as dctlib
+
+__all__ = [
+    "JpegError",
+    "UnsupportedJpegError",
+    "HuffmanTable",
+    "FrameComponent",
+    "DecodedJpeg",
+    "build_huffman_lut",
+    "parse_segments",
+    "decode_jpeg",
+]
+
+# marker bytes (second byte after 0xFF)
+SOI, EOI, SOS, DQT, DHT, DRI, COM = 0xD8, 0xD9, 0xDA, 0xDB, 0xC4, 0xDD, 0xFE
+SOF0 = 0xC0
+RST0, RST7 = 0xD0, 0xD7
+_SOF_ALL = set(range(0xC0, 0xD0)) - {0xC4, 0xC8, 0xCC}  # SOFn family
+_SUPPORTED_SOF = {0xC0, 0xC1}  # baseline + extended sequential (Huffman)
+
+
+class JpegError(ValueError):
+    """Malformed or truncated JPEG bitstream."""
+
+
+class UnsupportedJpegError(JpegError):
+    """Valid JPEG, but outside the baseline-sequential scope."""
+
+
+class HuffmanTable(NamedTuple):
+    """A decoded DHT table plus its flat 16-bit decode LUT.
+
+    ``lut[peek]`` packs ``(symbol << 8) | code_length`` for the code that
+    prefixes the 16-bit window ``peek``; ``-1`` marks invalid prefixes.
+    """
+
+    counts: np.ndarray   # (16,) codes per length 1..16
+    symbols: np.ndarray  # (sum(counts),) symbol values
+    lut: np.ndarray      # (65536,) int32
+
+
+class FrameComponent(NamedTuple):
+    ident: int   # component id from SOF (1=Y, 2=Cb, 3=Cr conventionally)
+    h: int       # horizontal sampling factor
+    v: int       # vertical sampling factor
+    tq: int      # quantization table id
+
+
+class DecodedJpeg(NamedTuple):
+    """Entropy-decoded file: quantized zigzag coefficients, no pixels.
+
+    ``coefficients[i]`` is ``(blocks_y, blocks_x, 64)`` int32 on component
+    ``i``'s MCU-padded grid; ``blocks(i)`` gives the true (unpadded) block
+    dims.  ``qtables`` are the file's zigzag-ordered DQT vectors.
+    """
+
+    width: int
+    height: int
+    components: tuple[FrameComponent, ...]
+    qtables: dict[int, np.ndarray]
+    coefficients: list[np.ndarray]
+    restart_interval: int = 0
+
+    def blocks(self, i: int) -> tuple[int, int]:
+        """True (blocks_y, blocks_x) of component ``i`` before MCU padding."""
+        c = self.components[i]
+        hmax = max(fc.h for fc in self.components)
+        vmax = max(fc.v for fc in self.components)
+        w = -(-self.width * c.h // hmax)   # ceil(width * h / hmax)
+        h = -(-self.height * c.v // vmax)
+        return -(-h // dctlib.BLOCK), -(-w // dctlib.BLOCK)
+
+    def qtable(self, i: int) -> np.ndarray:
+        return self.qtables[self.components[i].tq]
+
+
+# --------------------------------------------------------------------------
+# Huffman tables
+# --------------------------------------------------------------------------
+
+
+def build_huffman_lut(counts: np.ndarray, symbols: np.ndarray) -> HuffmanTable:
+    """Canonical-code LUT: every 16-bit window starting with code ``c`` of
+    length ``l`` maps to that code's symbol (spec §C.2 code assignment)."""
+    counts = np.asarray(counts, np.int64)
+    symbols = np.asarray(symbols, np.int64)
+    if counts.shape != (16,) or symbols.shape[0] != int(counts.sum()):
+        raise JpegError("inconsistent DHT counts/symbols")
+    lut = np.full(1 << 16, -1, np.int32)
+    code = 0
+    si = 0
+    for length in range(1, 17):
+        n = int(counts[length - 1])
+        for _ in range(n):
+            lo = code << (16 - length)
+            hi = (code + 1) << (16 - length)
+            if hi > (1 << 16):
+                raise JpegError("Huffman code overflows 16 bits")
+            lut[lo:hi] = (int(symbols[si]) << 8) | length
+            si += 1
+            code += 1
+        code <<= 1
+    return HuffmanTable(counts, symbols, lut)
+
+
+# --------------------------------------------------------------------------
+# Segment-level parsing
+# --------------------------------------------------------------------------
+
+
+def _u16(data: bytes, at: int) -> int:
+    if at + 2 > len(data):
+        raise JpegError("truncated segment length")
+    return (data[at] << 8) | data[at + 1]
+
+
+def parse_segments(data: bytes):
+    """Yield ``(marker, payload, ecs)`` triples in file order.
+
+    ``payload`` is the marker segment body (without the length field);
+    ``ecs`` is the entropy-coded byte string following an SOS marker (up to
+    but excluding the next non-RST marker), ``b""`` elsewhere.  RST markers
+    stay embedded in ``ecs`` — the entropy decoder splits on them.
+    """
+    if data[:2] != b"\xff\xd8":
+        raise JpegError("missing SOI marker — not a JPEG")
+    yield SOI, b"", b""
+    pos = 2
+    n = len(data)
+    while pos < n:
+        if data[pos] != 0xFF:
+            raise JpegError(f"expected marker at byte {pos}")
+        while pos < n and data[pos] == 0xFF:  # fill bytes are legal
+            pos += 1
+        if pos >= n:
+            raise JpegError("truncated marker")
+        marker = data[pos]
+        pos += 1
+        if marker == EOI:
+            yield EOI, b"", b""
+            return
+        if RST0 <= marker <= RST7 or marker == 0x01:
+            yield marker, b"", b""
+            continue
+        length = _u16(data, pos)
+        if length < 2 or pos + length > n:
+            raise JpegError("bad segment length")
+        payload = data[pos + 2: pos + length]
+        pos += length
+        ecs = b""
+        if marker == SOS:
+            start = pos
+            while pos + 1 < n:
+                if data[pos] == 0xFF and data[pos + 1] != 0x00 and not (
+                        RST0 <= data[pos + 1] <= RST7):
+                    break
+                pos += 1
+            else:
+                raise JpegError("entropy-coded data ran past end of file")
+            ecs = data[start:pos]
+        yield marker, payload, ecs
+    raise JpegError("missing EOI marker")
+
+
+def _parse_dqt(payload: bytes, qtables: dict[int, np.ndarray]) -> None:
+    at = 0
+    while at < len(payload):
+        pq, tq = payload[at] >> 4, payload[at] & 0x0F
+        at += 1
+        n = dctlib.NFREQ
+        if pq == 0:
+            vals = np.frombuffer(payload[at:at + n], np.uint8)
+            at += n
+        elif pq == 1:
+            vals = np.frombuffer(payload[at:at + 2 * n],
+                                 np.uint8).reshape(n, 2)
+            vals = vals[:, 0].astype(np.int64) * 256 + vals[:, 1]
+            at += 2 * n
+        else:
+            raise JpegError(f"bad DQT precision {pq}")
+        if vals.shape[0] != n:
+            raise JpegError("truncated DQT")
+        qtables[tq] = vals.astype(np.int64)
+
+
+def _parse_dht(payload: bytes, tables: dict[tuple[int, int], HuffmanTable]
+               ) -> None:
+    at = 0
+    while at < len(payload):
+        tc, th = payload[at] >> 4, payload[at] & 0x0F
+        at += 1
+        counts = np.frombuffer(payload[at:at + 16], np.uint8)
+        if counts.shape[0] != 16:
+            raise JpegError("truncated DHT")
+        at += 16
+        total = int(counts.sum())
+        symbols = np.frombuffer(payload[at:at + total], np.uint8)
+        if symbols.shape[0] != total:
+            raise JpegError("truncated DHT symbols")
+        at += total
+        tables[(tc, th)] = build_huffman_lut(counts, symbols)
+
+
+def _parse_sof(marker: int, payload: bytes):
+    if marker not in _SUPPORTED_SOF:
+        kind = {0xC2: "progressive", 0xC3: "lossless"}.get(
+            marker, f"SOF{marker - 0xC0}")
+        raise UnsupportedJpegError(
+            f"{kind} JPEG — only baseline/extended sequential Huffman "
+            f"(SOF0/SOF1) is supported")
+    precision = payload[0]
+    if precision != 8:
+        raise UnsupportedJpegError(f"{precision}-bit precision (want 8)")
+    height = (payload[1] << 8) | payload[2]
+    width = (payload[3] << 8) | payload[4]
+    ncomp = payload[5]
+    if height == 0 or width == 0:
+        raise UnsupportedJpegError("DNL-deferred dimensions not supported")
+    comps = []
+    for i in range(ncomp):
+        cid, hv, tq = payload[6 + 3 * i: 9 + 3 * i]
+        comps.append(FrameComponent(cid, hv >> 4, hv & 0x0F, tq))
+    return width, height, tuple(comps)
+
+
+# --------------------------------------------------------------------------
+# Entropy decoding
+# --------------------------------------------------------------------------
+
+
+def _unstuff(ecs: np.ndarray) -> np.ndarray:
+    """Drop the stuffed 0x00 after every 0xFF (vectorised)."""
+    if ecs.size == 0:
+        return ecs
+    drop = np.zeros(ecs.shape[0], bool)
+    ff = ecs[:-1] == 0xFF
+    drop[1:] = ff & (ecs[1:] == 0x00)
+    bad = ff & (ecs[1:] != 0x00)
+    if bad.any():
+        raise JpegError("unescaped marker inside entropy-coded segment")
+    return ecs[~drop]
+
+
+class _BitReader:
+    """Bit cursor over unstuffed bytes via precomputed 24-bit windows.
+
+    ``w24[i] = bytes[i:i+3]`` big-endian, so the 16 bits starting at bit
+    position ``pos`` are ``(w24[pos >> 3] >> (8 - (pos & 7))) & 0xFFFF``
+    — O(1) per peek, 8 bytes of table per input byte (no per-bit
+    expansion, which would be 64–1024× the input size).
+    """
+
+    __slots__ = ("w24", "pos", "n")
+
+    def __init__(self, raw: np.ndarray):
+        data = _unstuff(raw)
+        self.n = data.shape[0] * 8
+        # pad with 1-bits (the spec's pad value) so end-of-stream windows
+        # stay in range; reads past self.n are caught by the callers.
+        padded = np.concatenate([data,
+                                 np.full(3, 0xFF, np.uint8)]).astype(np.int64)
+        self.w24 = (padded[:-2] << 16) | (padded[1:-1] << 8) | padded[2:]
+        self.pos = 0
+
+    def _peek16(self, pos: int) -> int:
+        return (int(self.w24[pos >> 3]) >> (8 - (pos & 7))) & 0xFFFF
+
+    def read_code(self, table: HuffmanTable) -> int:
+        if self.pos >= self.n:
+            raise JpegError("bit stream exhausted mid-block")
+        packed = int(table.lut[self._peek16(self.pos)])
+        if packed < 0:
+            raise JpegError("invalid Huffman code")
+        self.pos += packed & 0xFF
+        if self.pos > self.n:
+            raise JpegError("Huffman code ran past end of segment")
+        return packed >> 8
+
+    def receive(self, s: int) -> int:
+        if s == 0:
+            return 0
+        if self.pos + s > self.n:
+            raise JpegError("value bits ran past end of segment")
+        v = self._peek16(self.pos) >> (16 - s)
+        self.pos += s
+        return v
+
+
+def _extend(v: int, s: int) -> int:
+    """Spec §F.12 EXTEND: map ``s`` received bits to a signed value."""
+    if s == 0:
+        return 0
+    return v if v >= (1 << (s - 1)) else v - (1 << s) + 1
+
+
+def _split_restarts(ecs: bytes) -> list[np.ndarray]:
+    """Split an SOS entropy segment at embedded RST markers."""
+    arr = np.frombuffer(ecs, np.uint8)
+    if arr.size == 0:
+        return [arr]
+    is_rst = np.zeros(arr.shape[0], bool)
+    ff = arr[:-1] == 0xFF
+    is_rst[:-1] = ff & (arr[1:] >= RST0) & (arr[1:] <= RST7)
+    cuts = np.where(is_rst)[0]
+    parts, start = [], 0
+    for c in cuts:
+        parts.append(arr[start:c])
+        start = c + 2  # skip FF Dn
+    parts.append(arr[start:])
+    return parts
+
+
+def _decode_block(br: _BitReader, dc: HuffmanTable, ac: HuffmanTable,
+                  out: np.ndarray) -> int:
+    """Decode one block's coefficients into ``out`` (64,); returns DC diff."""
+    s = br.read_code(dc)
+    if s > 15:
+        raise JpegError(f"bad DC size category {s}")
+    diff = _extend(br.receive(s), s)
+    k = 1
+    while k < dctlib.NFREQ:
+        rs = br.read_code(ac)
+        r, s = rs >> 4, rs & 0x0F
+        if s == 0:
+            if r == 15:       # ZRL: sixteen zeros
+                k += 16
+                continue
+            break             # EOB
+        k += r
+        if k >= dctlib.NFREQ:
+            raise JpegError("AC run past end of block")
+        out[k] = _extend(br.receive(s), s)
+        k += 1
+    return diff
+
+
+def decode_jpeg(data: bytes) -> DecodedJpeg:
+    """Entropy-decode baseline JFIF bytes to quantized zigzag coefficients.
+
+    Bit-exact: the returned integers are the file's step-5 values with the
+    DC prediction undone — re-encoding them (``codec.encode``) reproduces
+    an equivalent bitstream, and ``codec.normalize`` turns them into the
+    network's real-valued convention.
+    """
+    qtables: dict[int, np.ndarray] = {}
+    huffman: dict[tuple[int, int], HuffmanTable] = {}
+    frame = None
+    restart_interval = 0
+    scan = None
+
+    for marker, payload, ecs in parse_segments(data):
+        if marker == DQT:
+            _parse_dqt(payload, qtables)
+        elif marker == DHT:
+            _parse_dht(payload, huffman)
+        elif marker == DRI:
+            restart_interval = _u16(payload, 0)
+        elif marker in _SOF_ALL:
+            if frame is not None:
+                raise UnsupportedJpegError("multi-frame (hierarchical) JPEG")
+            frame = _parse_sof(marker, payload)
+        elif marker == SOS:
+            if frame is None:
+                raise JpegError("SOS before SOF")
+            if scan is not None:
+                raise UnsupportedJpegError("multi-scan JPEG (progressive?)")
+            scan = (payload, ecs)
+        # APPn / COM / others: skipped
+
+    if frame is None or scan is None:
+        raise JpegError("no image data (missing SOF/SOS)")
+    width, height, comps = frame
+    payload, ecs = scan
+    ns = payload[0]
+    if ns != len(comps):
+        raise UnsupportedJpegError("partial-component scan")
+    by_id = {c.ident: i for i, c in enumerate(comps)}
+    order, tables = [], []
+    for j in range(ns):
+        cs, tdta = payload[1 + 2 * j: 3 + 2 * j]
+        if cs not in by_id:
+            raise JpegError(f"scan references unknown component {cs}")
+        order.append(by_id[cs])
+        td, ta = tdta >> 4, tdta & 0x0F
+        try:
+            tables.append((huffman[(0, td)], huffman[(1, ta)]))
+        except KeyError as e:
+            raise JpegError(f"scan references missing Huffman table {e}")
+    for c in comps:
+        if c.tq not in qtables:
+            raise JpegError(f"component quantization table {c.tq} missing")
+
+    hmax = max(c.h for c in comps)
+    vmax = max(c.v for c in comps)
+    mcux = -(-width // (dctlib.BLOCK * hmax))
+    mcuy = -(-height // (dctlib.BLOCK * vmax))
+    interleaved = ns > 1
+    if not interleaved:
+        c = comps[order[0]]
+        # non-interleaved: the MCU is one block on the component's own grid
+        bx = -(-(-(-width * c.h // hmax)) // dctlib.BLOCK)
+        by = -(-(-(-height * c.v // vmax)) // dctlib.BLOCK)
+        grid = {order[0]: (by, bx)}
+        n_mcus = by * bx
+    else:
+        grid = {i: (mcuy * c.v, mcux * c.h) for i, c in enumerate(comps)}
+        n_mcus = mcuy * mcux
+    coef = [np.zeros((*grid[i], dctlib.NFREQ), np.int32)
+            for i in range(len(comps))]
+
+    segments = _split_restarts(ecs)
+    expected = (-(-n_mcus // restart_interval)
+                if restart_interval else 1)
+    if len(segments) != expected:
+        raise JpegError(
+            f"restart markers disagree with DRI: {len(segments)} segments "
+            f"for {n_mcus} MCUs at interval {restart_interval}")
+
+    block = np.zeros(dctlib.NFREQ, np.int32)
+    mcu = 0
+    for seg in segments:
+        br = _BitReader(seg)
+        preds = [0] * len(comps)
+        seg_end = (min(mcu + restart_interval, n_mcus)
+                   if restart_interval else n_mcus)
+        while mcu < seg_end:
+            if interleaved:
+                my, mx = divmod(mcu, mcux)
+                for j, ci in enumerate(order):
+                    c = comps[ci]
+                    dc_t, ac_t = tables[j]
+                    for vy in range(c.v):
+                        for vx in range(c.h):
+                            block[:] = 0
+                            preds[ci] += _decode_block(br, dc_t, ac_t, block)
+                            block[0] = preds[ci]
+                            coef[ci][my * c.v + vy, mx * c.h + vx] = block
+            else:
+                ci = order[0]
+                dc_t, ac_t = tables[0]
+                by_, bx_ = grid[ci]
+                yy, xx = divmod(mcu, bx_)
+                block[:] = 0
+                preds[ci] += _decode_block(br, dc_t, ac_t, block)
+                block[0] = preds[ci]
+                coef[ci][yy, xx] = block
+            mcu += 1
+    if mcu != n_mcus:
+        raise JpegError(f"decoded {mcu} MCUs, expected {n_mcus}")
+
+    return DecodedJpeg(width, height, comps,
+                       {k: v.copy() for k, v in qtables.items()},
+                       coef, restart_interval)

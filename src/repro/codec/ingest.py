@@ -1,0 +1,140 @@
+"""Batched compressed ingest: JPEG bytes → network-ready coefficient batches.
+
+The last stage of the codec subsystem: entropy-decode
+(:mod:`codec.bitstream`), normalize into the plan's canonical convention
+(:mod:`codec.normalize`), stack into the ``(N, bh, bw, C, 64)`` batch the
+plan walk consumes — or pack straight into the tile-packed
+``(N, bh, bw, C·w)`` layout the compiled schedule's stem GEMM reads
+(``kernels/tiling.py``; per-channel zigzag prefixes of width ``w``), so
+band truncation happens at ingest and the 64-wide layout is never
+materialised on the serving path.
+
+Ingest also records **empirical per-band statistics** of the traffic it
+decodes (:class:`IngestStats`): mean canonical coefficient energy and
+nonzero occupancy per zigzag index.  ``core.plan.autotune_bands`` accepts
+the energy vector as a drop-in replacement for its ``1/q²`` qtable prior —
+band truncation tuned to what the traffic actually contains — and logs
+chosen bands against the occupancy so over-truncation is visible.
+"""
+from __future__ import annotations
+
+from typing import Iterable, NamedTuple
+
+import numpy as np
+
+from repro.core import dct as dctlib
+from repro.codec import bitstream as bslib
+from repro.codec import normalize as nmlib
+
+__all__ = [
+    "IngestStats",
+    "decode_bytes",
+    "ingest_batch",
+    "pack_tiles",
+    "merge_stats",
+]
+
+
+class IngestStats(NamedTuple):
+    """Per-zigzag-index traffic statistics from one ingest pass.
+
+    ``energy[k]`` — mean squared canonical coefficient at zigzag index
+    ``k`` (an *empirical* energy profile; feed to
+    ``core.plan.autotune_bands(profile=...)``).  ``occupancy[k]`` — the
+    fraction of blocks whose coefficient ``k`` is nonzero (the JPEG
+    sparsity the paper's §6 leans on; ``occupancy[b:]`` is what a band
+    cutoff at ``b`` throws away).
+    """
+
+    images: int
+    blocks: int
+    bytes_in: int
+    energy: np.ndarray     # (64,) float64
+    occupancy: np.ndarray  # (64,) float64
+
+    @property
+    def mean_nonzero(self) -> float:
+        """Average nonzero coefficients per block (format sparsity)."""
+        return float(self.occupancy.sum())
+
+
+def merge_stats(parts: Iterable[IngestStats]) -> IngestStats:
+    """Block-weighted merge of stats from several ingest passes."""
+    parts = [p for p in parts if p is not None and p.blocks]
+    if not parts:
+        z = np.zeros(dctlib.NFREQ)
+        return IngestStats(0, 0, 0, z, z.copy())
+    blocks = sum(p.blocks for p in parts)
+    energy = sum(p.energy * p.blocks for p in parts) / blocks
+    occ = sum(p.occupancy * p.blocks for p in parts) / blocks
+    return IngestStats(sum(p.images for p in parts), blocks,
+                       sum(p.bytes_in for p in parts), energy, occ)
+
+
+def decode_bytes(data: bytes, *, quality: int = 50,
+                 grid: tuple[int, int] | None = None,
+                 channels: int | None = None) -> np.ndarray:
+    """One file → ``(bh, bw, C, 64)`` float32 canonical coefficients
+    (entropy decode + per-image quantization normalization, no pixels)."""
+    dec = bslib.decode_jpeg(data)
+    return nmlib.normalize_image(dec, quality=quality, grid=grid,
+                                 channels=channels)
+
+
+def pack_tiles(coef: np.ndarray, width: int) -> np.ndarray:
+    """``(..., C, 64) → (..., C·width)`` — the tile-packed activation
+    layout of ``kernels/tiling.py``: each channel keeps its first
+    ``width`` zigzag lanes (zero-padded above 64, which cannot happen
+    here), concatenated channel-major.  This is exactly the slice+reshape
+    the compiled stem would otherwise perform on the 64-wide batch, done
+    at ingest so the full-width layout never exists.
+    """
+    *lead, c, nf = coef.shape
+    if width <= nf:
+        out = coef[..., :width]
+    else:
+        out = np.zeros((*lead, c, width), coef.dtype)
+        out[..., :nf] = coef
+    return np.ascontiguousarray(out).reshape(*lead, c * width)
+
+
+def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
+                 grid: tuple[int, int] | None = None, channels: int = 3,
+                 pack_width: int | None = None,
+                 with_stats: bool = True
+                 ) -> tuple[np.ndarray, IngestStats | None]:
+    """Decode + normalize a batch of JPEG byte strings.
+
+    Returns ``(batch, stats)``: ``batch`` is ``(N, bh, bw, C, 64)``
+    float32, or the tile-packed ``(N, bh, bw, C·pack_width)`` layout when
+    ``pack_width`` is given (e.g. ``CompiledPlan.stem.w_in``).  All images
+    must land on one grid — pass ``grid`` explicitly for mixed-size
+    traffic.  ``stats`` aggregates the per-band energy/occupancy of the
+    decoded coefficients (pre-packing, so the profile always covers all
+    64 indices).
+    """
+    planes, n_bytes = [], 0
+    for data in datas:
+        planes.append(decode_bytes(data, quality=quality, grid=grid,
+                                   channels=channels))
+        n_bytes += len(data)
+    if not planes:
+        raise ValueError("empty ingest batch")
+    shapes = {p.shape for p in planes}
+    if len(shapes) > 1:
+        raise ValueError(
+            f"mixed grids in one batch: {sorted(shapes)} — pass grid=")
+    batch = np.stack(planes)
+    stats = None
+    if with_stats:
+        flat = batch.reshape(-1, dctlib.NFREQ).astype(np.float64)
+        stats = IngestStats(
+            images=batch.shape[0],
+            blocks=flat.shape[0],
+            bytes_in=n_bytes,
+            energy=np.mean(flat * flat, axis=0),
+            occupancy=np.mean(flat != 0.0, axis=0),
+        )
+    if pack_width is not None:
+        batch = pack_tiles(batch, pack_width)
+    return batch, stats

@@ -10,12 +10,31 @@ Spatial images are ``(..., H, W)``; their transform-domain representation is
 ``(..., H/8, W/8, 64)`` — block-row, block-col, zigzag coefficient.  The
 leading axes (batch, channels) are untouched.
 
-Two coefficient conventions are supported (DESIGN.md §7):
+Coefficient conventions (DESIGN.md §7; the first two are this module's
+``scaled`` flag, the third is produced by the codec subsystem):
 
-* ``scaled=True``  — true step-4 JPEG coefficients (divided by ``q``);
-* ``scaled=False`` — plain orthonormal DCT coefficients ("DCT domain"),
-  the network-internal convention in which quantization diagonals have been
-  folded into the adjacent operators.
+===========================  ==============================================
+convention                   meaning
+===========================  ==============================================
+``scaled=True``              true step-4 JPEG coefficients (divided by
+                             ``q``) for pixels in the network's ~[-1, 1)
+                             range — the network input convention
+``scaled=False``             plain orthonormal DCT coefficients ("DCT
+                             domain"); quantization diagonals folded into
+                             the adjacent operators
+canonical-qtable-normalized  a *file's* quantized integers rescaled by
+                             ``codec.normalize`` into ``scaled=True`` form
+                             under THIS repo's canonical table
+                             (``dct.quantization_table(quality)``, DC
+                             forced to 8): ``v·q_file/(128·q_canon)``.
+                             Exact and linear, so one compiled plan serves
+                             files with arbitrary quantization tables
+===========================  ==============================================
+
+Note the orthonormal 8×8 DCT here coincides with the JPEG standard's DCT
+definition, and steps 5+ (rounding, entropy coding) live in
+``repro.codec`` (``bitstream``/``encode``) — this module stays the
+real-valued transform-domain core.
 
 ``jpeg_tensor``/``ijpeg_tensor`` materialise the paper's ``J``/``J̃``
 tensors explicitly; they are O((HW)²) and exist for tests and for the

@@ -62,6 +62,7 @@ __all__ = [
     "InferencePlan",
     "qtable_band_energy",
     "bands_for_budget",
+    "bands_for_profile",
     "autotune_bands",
     "operator_keys",
     "build_operators",
@@ -75,6 +76,7 @@ __all__ = [
     "CompiledPlan",
     "compile_plan",
     "apply_compiled",
+    "apply_compiled_packed",
     "save_compiled_plan",
     "load_compiled_plan",
 ]
@@ -104,17 +106,39 @@ def qtable_band_energy(quality: int = 50) -> np.ndarray:
     return np.cumsum(w) / np.sum(w)
 
 
+def _bands_from_cum(cum: np.ndarray, budget: float) -> int:
+    if not 0.0 < budget <= 1.0:
+        raise ValueError(f"budget must be in (0, 1], got {budget}")
+    b = int(np.searchsorted(cum, budget - 1e-12) + 1)
+    return min(dctlib.NFREQ, ((b + 7) // 8) * 8)
+
+
 def bands_for_budget(quality: int, budget: float) -> int:
     """Smallest band count whose cumulative qtable energy ≥ ``budget``.
 
     Rounded up to a multiple of 8 (lane alignment).  Monotone in
     ``budget``: a tighter (smaller) budget never yields *more* bands.
     """
-    if not 0.0 < budget <= 1.0:
-        raise ValueError(f"budget must be in (0, 1], got {budget}")
-    cum = qtable_band_energy(quality)
-    b = int(np.searchsorted(cum, budget - 1e-12) + 1)
-    return min(dctlib.NFREQ, ((b + 7) // 8) * 8)
+    return _bands_from_cum(qtable_band_energy(quality), budget)
+
+
+def _profile_cum(profile: np.ndarray) -> np.ndarray:
+    p = np.asarray(profile, np.float64).reshape(dctlib.NFREQ)
+    if np.any(p < 0):
+        raise ValueError("energy profile must be non-negative")
+    total = p.sum()
+    if total <= 0:
+        raise ValueError("energy profile is all zero")
+    return np.cumsum(p) / total
+
+
+def bands_for_profile(profile: np.ndarray, budget: float) -> int:
+    """:func:`bands_for_budget` over an *empirical* per-zigzag energy
+    profile (e.g. ``codec.ingest.IngestStats.energy`` measured on real
+    traffic) instead of the flat-spectrum ``1/q²`` qtable prior.
+    Monotone in ``budget`` for a fixed profile.
+    """
+    return _bands_from_cum(_profile_cum(profile), budget)
 
 
 def operator_keys(params: Any, spec: resnetlib.ResNetSpec) -> list[str]:
@@ -138,13 +162,18 @@ def autotune_bands(
     tol: float = 5e-2,
     ladder: tuple[int, ...] = BAND_LADDER,
     phi: int | None = None,
+    profile: np.ndarray | None = None,
+    occupancy: np.ndarray | None = None,
 ) -> dict[str, int]:
     """Per-layer band assignment from qtable energy + optional parity sweep.
 
     Every conv operator starts at :func:`bands_for_budget` (the qtable
-    energy heuristic — monotone in ``budget``).  With ``probe_coef``
-    (a small ``(N, bh, bw, C, 64)`` coefficient batch) the assignment is
-    refined against the *reference path at full bands*:
+    energy heuristic — monotone in ``budget``); with ``profile`` (a
+    per-zigzag empirical energy vector, e.g. measured by
+    ``codec.ingest``) the start point is :func:`bands_for_profile` over
+    the *observed* traffic instead of the flat-spectrum prior.  With
+    ``probe_coef`` (a small ``(N, bh, bw, C, 64)`` coefficient batch) the
+    assignment is refined against the *reference path at full bands*:
 
     1. escalate all layers one ladder step while the probe logits disagree
        (top-1) or deviate by more than ``tol`` — the heuristic may be too
@@ -152,11 +181,18 @@ def autotune_bands(
     2. one greedy tightening pass, last layer to first: lower each layer
        individually while parity still holds — layers differ in
        sensitivity, which is what makes the result genuinely per-layer.
+
+    When a profile is given, the chosen per-layer bands are logged against
+    its energy coverage (and ``occupancy`` — the fraction of nonzero
+    input coefficients a cutoff drops — when provided), so silent
+    over-truncation is visible in the build output.
     """
-    base = bands_for_budget(spec.quality, budget)
+    base = (bands_for_profile(profile, budget) if profile is not None
+            else bands_for_budget(spec.quality, budget))
     keys = operator_keys(params, spec)
     bands = {k: base for k in keys}
     if probe_coef is None:
+        _log_band_choice(bands, keys, profile, occupancy)
         return bands
 
     # The sweep probes many assignments that differ in a single layer, so
@@ -211,7 +247,26 @@ def autotune_bands(
             if not parity(trial):
                 break
             bands = trial
+    _log_band_choice(bands, keys, profile, occupancy)
     return bands
+
+
+def _log_band_choice(bands: dict[str, int], keys: list[str],
+                     profile: np.ndarray | None,
+                     occupancy: np.ndarray | None) -> None:
+    """Make over-truncation visible: per layer, the empirical energy the
+    cutoff keeps and the nonzero-coefficient mass it drops."""
+    if profile is None:
+        return
+    cum = _profile_cum(profile)
+    occ_total = float(np.sum(occupancy)) if occupancy is not None else 0.0
+    for k in keys:
+        b = bands[k]
+        line = f"[autotune] {k}: bands={b} energy_kept={cum[b - 1]:.4f}"
+        if occupancy is not None and occ_total > 0:
+            dropped = float(np.sum(occupancy[b:])) / occ_total
+            line += f" occupancy_dropped={dropped:.2%}"
+        print(line, flush=True)
 
 
 # --------------------------------------------------------------------------
@@ -352,6 +407,8 @@ def build_plan(
     bands: Any = None,
     budget: float | None = None,
     probe_coef: jnp.ndarray | None = None,
+    profile: np.ndarray | None = None,
+    occupancy: np.ndarray | None = None,
     eps: float = 1e-5,
 ) -> InferencePlan:
     """Fuse, autotune, and explode a trained model into an ``InferencePlan``.
@@ -359,8 +416,9 @@ def build_plan(
     ``bands``: None → the frozen dispatch config's global knob (the
     override path); an int or per-key dict → explicit assignment; the
     string ``"auto"`` (or a ``budget``) → :func:`autotune_bands` from the
-    quantization table, refined by a parity sweep when ``probe_coef`` is
-    given.
+    quantization table — or from an empirical coefficient-energy
+    ``profile`` (``codec.ingest`` stats) when given — refined by a parity
+    sweep when ``probe_coef`` is given.
     """
     phi = spec.phi if phi is None else phi
     cfg = dispatchlib.resolve_config(dispatch)
@@ -368,13 +426,16 @@ def build_plan(
     if autotuned:
         bands = autotune_bands(params, state, spec,
                                budget=0.95 if budget is None else budget,
-                               probe_coef=probe_coef, phi=phi)
+                               probe_coef=probe_coef, phi=phi,
+                               profile=profile, occupancy=occupancy)
     provenance = {
         "bands_mode": ("auto" if autotuned
                        else "global" if bands is None
                        else "explicit"),
         "budget": budget,
         "probe": probe_coef is not None,
+        "energy": ("empirical" if profile is not None else "qtable")
+        if autotuned else None,
     }
     folds = _fold_all(params, state, spec, eps=eps)
     ops = build_operators(params, spec, cfg, folds=folds, bands=bands)
@@ -687,6 +748,50 @@ def apply_compiled(cp: CompiledPlan, coef: jnp.ndarray,
     cfg = cp.cfg if cfg is None else cfg
     path = (cp.meta or {}).get("path", "reference")
     h = _apply_stem(cp.stem, coef, cp.phi, path, cfg)
+    return _run_blocks(cp, h, cfg)
+
+
+def apply_compiled_packed(cp: CompiledPlan, packed: jnp.ndarray,
+                          cfg: dispatchlib.DispatchConfig | None = None
+                          ) -> jnp.ndarray:
+    """Execute the compiled schedule from a **tile-packed** stem input.
+
+    ``packed`` is ``(N, bh, bw, Cin·w_in)`` with ``w_in =
+    CompiledPlan.stem.w_in`` — the layout ``codec.ingest.ingest_batch``
+    emits with ``pack_width=cp.stem.w_in``, i.e. band truncation already
+    happened at ingest and the 64-wide batch was never materialised.
+    Identical logits to :func:`apply_compiled` on the corresponding
+    full-width batch: every stem executor reads at most ``w_in ≥
+    stem.bands`` zigzag lanes per channel, so the packing drops nothing.
+    """
+    cfg = cp.cfg if cfg is None else cfg
+    path = (cp.meta or {}).get("path", "reference")
+    st = cp.stem
+    n, bh, bw, k = packed.shape
+    if k != st.cin * st.w_in:
+        raise ValueError(
+            f"packed input has per-channel width {k / st.cin:g}, "
+            f"stem expects w_in={st.w_in} (cin={st.cin})")
+    if st.kind == "packed" and path == "pallas" \
+            and not dispatchlib._pallas_delegates(cfg):
+        from repro.kernels import tiling
+
+        h = tiling.packed_conv_apply(packed, st.conv)
+        h = tiling.packed_asm_apply(h, st.asm)
+    else:
+        # the spatial / per-layer stem executors consume the 64-wide
+        # layout; unpacking is an elementwise zero-pad (exact — lanes
+        # beyond w_in ≥ stem.bands are dropped by the stem conv anyway)
+        from repro.core.conv import pad_bands
+
+        coef = pad_bands(packed.reshape(n, bh, bw, st.cin, st.w_in))
+        h = _apply_stem(st, coef, cp.phi, path, cfg)
+    return _run_blocks(cp, h, cfg)
+
+
+def _run_blocks(cp: CompiledPlan, h: jnp.ndarray,
+                cfg: dispatchlib.DispatchConfig) -> jnp.ndarray:
+    """Shared post-stem walk: fused/fallback steps, DC-read head."""
     cur_w = cp.stem.w_out
     h = shard(h, "batch", None, None, None)
     for blk in cp.blocks:

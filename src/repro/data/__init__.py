@@ -2,7 +2,9 @@
 from repro.data.pipeline import (  # noqa: F401
     DataIterator,
     image_iterator,
+    jpeg_file_iterator,
     jpeg_iterator,
+    list_jpeg_files,
     prefetch,
     token_iterator,
 )

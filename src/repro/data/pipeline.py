@@ -3,15 +3,19 @@
 ``DataIterator`` is a pure function of (seed, step): its checkpoint state is
 two integers, giving exactly-once semantics across restarts and *elastic*
 re-sharding (a restarted job with a different data-parallel size replays
-from the same global step).  ``prefetch`` overlaps host batch synthesis
-with device compute via a background thread.
+from the same global step).  This holds for the real-file iterator too:
+``jpeg_file_iterator`` samples from a *frozen* file list, so (seed, step)
+fully determines a batch as long as the files themselves are immutable.
+``prefetch`` overlaps host batch synthesis with device compute via a
+background thread (joined and drained on close — no leaked producers).
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Any, Callable, Iterator
+from typing import Any, Callable, Iterator, Sequence
 
 import jax
 import numpy as np
@@ -20,7 +24,7 @@ from repro.data import synthetic
 from repro.core import jpeg as jpeglib
 
 __all__ = ["DataIterator", "token_iterator", "image_iterator", "jpeg_iterator",
-           "prefetch"]
+           "jpeg_file_iterator", "list_jpeg_files", "prefetch"]
 
 
 @dataclass
@@ -81,22 +85,112 @@ def jpeg_iterator(seed: int, batch: int, size: int, channels: int = 3,
     return DataIterator(fn, seed)
 
 
+def list_jpeg_files(directory: str) -> list[str]:
+    """Sorted JPEG paths under ``directory`` (recursive) — sorted so the
+    list, and therefore every (seed, step) batch, is reproducible."""
+    out = []
+    for root, _, names in os.walk(directory):
+        for name in names:
+            if name.lower().endswith((".jpg", ".jpeg", ".jfif")):
+                out.append(os.path.join(root, name))
+    return sorted(out)
+
+
+def jpeg_file_iterator(paths: Sequence[str] | str, batch: int, *,
+                       grid: tuple[int, int], channels: int = 3,
+                       quality: int = 50, seed: int = 0,
+                       label_fn: Callable[[str], int] | None = None,
+                       pack_width: int | None = None) -> DataIterator:
+    """Real JPEG files → canonical network coefficients, checkpointably.
+
+    ``paths`` is a directory (walked once, sorted) or an explicit
+    sequence; each batch samples ``batch`` files with the same pure
+    (seed, step) semantics as the synthetic iterators — the checkpoint
+    state stays two integers, and a restarted job replays the exact
+    batch.  Files go through the full codec ingest (entropy decode →
+    per-image quantization normalization → ``grid`` fit); no pixels are
+    materialised.  ``label_fn`` maps a path to its class id (default −1:
+    unlabeled serving traffic); ``pack_width`` emits the tile-packed
+    ``(N, bh, bw, C·w)`` layout instead of ``(N, bh, bw, C, 64)``.
+    """
+    from repro.codec import ingest as ingestlib
+
+    if isinstance(paths, str):
+        paths = list_jpeg_files(paths)
+    paths = list(paths)
+    if not paths:
+        raise ValueError("jpeg_file_iterator: no files")
+
+    def fn(s, i):
+        rng = synthetic._rng(s, i)
+        idx = rng.integers(0, len(paths), size=batch)
+        datas = []
+        for j in idx:
+            with open(paths[j], "rb") as f:
+                datas.append(f.read())
+        coef, _ = ingestlib.ingest_batch(
+            datas, quality=quality, grid=grid, channels=channels,
+            pack_width=pack_width, with_stats=False)
+        labels = np.asarray([label_fn(paths[j]) if label_fn else -1
+                             for j in idx], np.int32)
+        return {"coefficients": coef, "labels": labels}
+
+    return DataIterator(fn, seed)
+
+
 def prefetch(it: Iterator[Any], depth: int = 2) -> Iterator[Any]:
-    """Background-thread prefetch — overlaps host data synthesis with step."""
+    """Background-thread prefetch — overlaps host data synthesis with step.
+
+    The producer thread is *owned* by the generator: closing it early
+    (``close()``, ``break``, an exception in the consumer) or exhausting
+    it joins the thread and drains the queue, so no producer outlives its
+    consumer and no batch is left pinned in the queue.  An exception in
+    the source iterator is re-raised at the consumer's next pull instead
+    of killing the thread silently.
+    """
     q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+    stop = threading.Event()
     sentinel = object()
 
     def worker():
         try:
             for item in it:
-                q.put(item)
-        finally:
-            q.put(sentinel)
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                if stop.is_set():
+                    return
+            _put_final(sentinel)
+        except BaseException as e:  # re-raised on the consumer side
+            _put_final(e)
+
+    def _put_final(item):
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
 
     t = threading.Thread(target=worker, daemon=True)
     t.start()
-    while True:
-        item = q.get()
-        if item is sentinel:
-            return
-        yield item
+    try:
+        while True:
+            item = q.get()
+            if item is sentinel:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+        while t.is_alive():
+            try:  # unblock a producer stuck on a full queue
+                q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=0.05)
+        t.join()

@@ -8,6 +8,16 @@ image-classification service (``--arch jpeg-resnet``): batches of JPEG
 coefficients in, labels out — the paper's "skip the decompression step"
 deployment story.
 
+Two request formats (``--ingest``): ``coefficients`` (pre-materialized
+coefficient tensors from the synthetic pipeline — the parity/benchmark
+workload) and ``bytes`` — **real baseline JPEG files**, entropy-decoded
+and quantization-normalized by ``repro.codec`` on the host (no spatial
+decode anywhere) and packed straight into the compiled plan's tile-packed
+stem layout.  Byte requests come from ``--jpeg-dir`` when given, else
+from a deterministic synthetic stream of *mixed-quality* encodes
+(qualities 35/50/75/90 through ``codec.encode_pixels``), exercising the
+per-image quantization normalization that lets one plan serve them all.
+
 jpeg-resnet serving is **plan-backed** (convert-once): the process restores
 an :class:`repro.core.plan.InferencePlan` from ``--plan-dir`` — fused
 batch norm, per-layer autotuned bands, apply paths resolved at build time
@@ -44,7 +54,61 @@ from repro.configs.base import get_config, reduced_config
 from repro.core import dispatch as dispatchlib
 from repro.models.registry import build_model
 
-__all__ = ["main", "serve_lm", "serve_jpeg_resnet", "prepare_plan"]
+__all__ = ["main", "serve_lm", "serve_jpeg_resnet", "prepare_plan",
+           "jpeg_byte_requests"]
+
+#: quality mix of the synthetic byte stream — one compiled plan serves all
+#: of them through codec.normalize's per-image qtable rescale.
+BYTE_QUALITIES = (35, 50, 75, 90)
+
+
+def jpeg_byte_requests(args, cfg, seed: int):
+    """Request source for ``--ingest bytes``: ``fn(step) -> list[bytes]``.
+
+    With ``--jpeg-dir``: deterministic (seed, step) sampling from the
+    sorted file list (same semantics as ``data.jpeg_file_iterator``).
+    Otherwise: the synthetic image corpus entropy-encoded to *real*
+    baseline JFIF bytes at a rotating quality mix — genuine compressed
+    traffic with per-image quantization tables.
+    """
+    from repro.data.synthetic import _rng, image_batch
+
+    jpeg_dir = getattr(args, "jpeg_dir", None)
+    if jpeg_dir:
+        from repro.data.pipeline import list_jpeg_files
+
+        paths = list_jpeg_files(jpeg_dir)
+        if not paths:
+            raise FileNotFoundError(f"no JPEG files under {jpeg_dir}")
+
+        def from_files(step: int) -> list[bytes]:
+            idx = _rng(seed, step).integers(0, len(paths), size=args.batch)
+            out = []
+            for j in idx:
+                with open(paths[j], "rb") as f:
+                    out.append(f.read())
+            return out
+
+        return from_files
+
+    from repro.codec import encode_pixels
+    from repro.core import dct as dctlib
+
+    def from_synthetic(step: int) -> list[bytes]:
+        b = image_batch(seed, step, args.batch, cfg.image_size,
+                        cfg.in_channels, cfg.num_classes)
+        out = []
+        for i, img in enumerate(b["images"]):
+            q = BYTE_QUALITIES[(step * args.batch + i) % len(BYTE_QUALITIES)]
+            # the *true* IJG table (no dc_is_mean) — foreign files don't
+            # share the plan's DC convention; normalize rescales exactly
+            qt = np.rint(dctlib.quantization_table(
+                q, dc_is_mean=False)).astype(np.int64)
+            out.append(encode_pixels(np.clip(img, -1.0, 127.0 / 128.0),
+                                     qtable=qt))
+        return out
+
+    return from_synthetic
 
 
 def serve_lm(args) -> dict:
@@ -113,6 +177,7 @@ def prepare_plan(args, cfg, dcfg):
     spec = jpeg_resnet_spec(cfg)
     autotune = getattr(args, "autotune_bands", False)
     want_compiled = getattr(args, "compiled", None)
+    from_bytes = getattr(args, "ingest", "coefficients") == "bytes"
     plan_dir = args.plan_dir or os.path.join("plans", cfg.name)
     plan, built = None, False
     try:
@@ -130,16 +195,31 @@ def prepare_plan(args, cfg, dcfg):
     if plan is None:
         built = True
         params, state = R.init_resnet(jax.random.PRNGKey(args.seed), spec)
-        probe = None
+        probe, profile, occupancy = None, None, None
         if autotune:
-            from repro.data import jpeg_iterator
+            if from_bytes:
+                # probe the *byte* traffic itself: the empirical energy /
+                # occupancy stats replace the 1/q² qtable prior, so band
+                # truncation is tuned to what the stream actually carries
+                from repro.codec import ingest as ingestlib
 
-            probe_it = jpeg_iterator(args.seed + 1, 4, cfg.image_size,
-                                     cfg.in_channels, cfg.num_classes)
-            probe = jnp.asarray(next(probe_it)["coefficients"])
+                n_blocks = cfg.image_size // 8
+                probe_np, stats = ingestlib.ingest_batch(
+                    jpeg_byte_requests(args, cfg, args.seed + 1)(0),
+                    quality=spec.quality, grid=(n_blocks, n_blocks),
+                    channels=cfg.in_channels)
+                probe = jnp.asarray(probe_np)
+                profile, occupancy = stats.energy, stats.occupancy
+            else:
+                from repro.data import jpeg_iterator
+
+                probe_it = jpeg_iterator(args.seed + 1, 4, cfg.image_size,
+                                         cfg.in_channels, cfg.num_classes)
+                probe = jnp.asarray(next(probe_it)["coefficients"])
         bands = "auto" if autotune else args.bands
         plan = planlib.build_plan(params, state, spec, dispatch=dcfg,
-                                  bands=bands, probe_coef=probe)
+                                  bands=bands, probe_coef=probe,
+                                  profile=profile, occupancy=occupancy)
         planlib.save_plan(plan, plan_dir)
         plan = planlib.load_plan(plan_dir)  # serve from the restored artifact
 
@@ -205,10 +285,48 @@ def serve_jpeg_resnet(args) -> dict:
     else:
         print("[serve] per-layer plan execution (no compiled schedule)")
         fwd = jax.jit(lambda c: planlib.apply_plan(plan, c))
-    it = jpeg_iterator(args.seed, args.batch, cfg.image_size,
-                       cfg.in_channels, cfg.num_classes)
+
+    spec = plan.spec
+    n_blocks = cfg.image_size // 8
+    ingest_mode = getattr(args, "ingest", "coefficients")
+    jpeg_dir = getattr(args, "jpeg_dir", None)
+    if ingest_mode == "bytes":
+        # bytes-in request path: entropy decode + per-image quantization
+        # normalization on the host (repro.codec — never a spatial
+        # decode), packed straight into the compiled stem's tile-packed
+        # layout when a compiled schedule is serving
+        from repro.codec import ingest as ingestlib
+
+        requests = jpeg_byte_requests(args, cfg, args.seed)
+        pack_w = compiled.stem.w_in if compiled is not None else None
+        if compiled is not None:
+            fwd = jax.jit(
+                lambda c: planlib.apply_compiled_packed(compiled, c))
+        collected = []
+
+        def next_batch(step: int) -> jnp.ndarray:
+            batch, stats = ingestlib.ingest_batch(
+                requests(step), quality=spec.quality,
+                grid=(n_blocks, n_blocks), channels=cfg.in_channels,
+                pack_width=pack_w)
+            collected.append(stats)
+            return jnp.asarray(batch)
+
+        layout = f"tile-packed w={pack_w}" if pack_w else "64-wide"
+        source = (f"files from {jpeg_dir}" if jpeg_dir
+                  else "synthetic mixed-quality stream")
+        print(f"[serve] bytes-in ingest: {layout} ({source})")
+    else:
+        it = jpeg_iterator(args.seed, args.batch, cfg.image_size,
+                           cfg.in_channels, cfg.num_classes)
+
+        def next_batch(step: int) -> jnp.ndarray:
+            return jnp.asarray(next(it)["coefficients"])
+
     # warmup/compile
-    fwd(jnp.asarray(next(it)["coefficients"])).block_until_ready()
+    fwd(next_batch(0)).block_until_ready()
+    if ingest_mode == "bytes":
+        collected.clear()  # the timed window starts after warmup
 
     # slot-based continuous batching (same structure as serve_lm): each
     # request classifies a random number of images; finished slots refill
@@ -225,9 +343,11 @@ def serve_jpeg_resnet(args) -> dict:
     produced = np.zeros((b,), np.int64)
     n_imgs = 0
     completed = 0
+    step = 1  # step 0 fed the warmup
     t0 = time.time()
     while completed < args.requests and active.any():
-        logits = fwd(jnp.asarray(next(it)["coefficients"]))
+        logits = fwd(next_batch(step))
+        step += 1
         logits.block_until_ready()  # labels would ship to clients here
         n_imgs += int(active.sum())
         produced += active
@@ -244,7 +364,17 @@ def serve_jpeg_resnet(args) -> dict:
     out = {"arch": cfg.name, "images": n_imgs, "wall_s": wall,
            "images_per_s": n_imgs / max(wall, 1e-9),
            "completed": completed, "dispatch": plan.cfg.path,
-           "plan": plan_info}
+           "ingest": ingest_mode, "plan": plan_info}
+    if ingest_mode == "bytes" and collected:
+        from repro.codec import merge_stats
+
+        ingest_stats = merge_stats(collected)
+        out["ingest_stats"] = {
+            "images": ingest_stats.images,
+            "bytes_in": ingest_stats.bytes_in,
+            "mb_per_s": ingest_stats.bytes_in / max(wall, 1e-9) / 2**20,
+            "mean_nonzero_per_block": round(ingest_stats.mean_nonzero, 2),
+        }
     print(json.dumps(out))
     return out
 
@@ -269,6 +399,17 @@ def main() -> None:
                     help="jpeg-resnet InferencePlan checkpoint directory "
                          "(default plans/<arch>); restored at startup, "
                          "built+saved once if absent")
+    ap.add_argument("--ingest", default="coefficients",
+                    choices=("coefficients", "bytes"),
+                    help="jpeg-resnet request format: pre-materialized "
+                         "coefficient tensors, or real baseline JPEG "
+                         "bytes through the repro.codec ingest path "
+                         "(entropy decode + quantization normalization, "
+                         "no spatial decode)")
+    ap.add_argument("--jpeg-dir", default=None,
+                    help="directory of .jpg files to serve with "
+                         "--ingest bytes (default: synthetic "
+                         "mixed-quality encoded stream)")
     ap.add_argument("--autotune-bands", action="store_true",
                     help="when building the plan, pick per-layer bands "
                          "from the quantization table + a parity sweep "

@@ -41,7 +41,28 @@ from repro.models.registry import build_model, count_params
 from repro.optim import make_optimizer, make_schedule
 from repro.optim.grad import clip_by_global_norm
 
-__all__ = ["main", "train_loop"]
+__all__ = ["main", "train_loop", "export_plan"]
+
+
+def export_plan(cfg, bundle, ckpt_dir: str, *, step: int = 0) -> str:
+    """Plan-aware training handoff: fuse the current jpeg-resnet weights
+    into an ``InferencePlan`` (+ compiled schedule) under
+    ``<ckpt_dir>/plan``, the directory ``launch.serve --plan-dir`` restores
+    from — serving picks up fresh weights without a manual convert step.
+    """
+    from repro.core import plan as planlib
+    from repro.models.registry import jpeg_resnet_spec
+
+    spec = jpeg_resnet_spec(cfg)
+    plan_dir = os.path.join(ckpt_dir, "plan")
+    plan = planlib.build_plan(bundle["params"], bundle["bn_state"], spec)
+    planlib.save_plan(plan, plan_dir, step=step)
+    planlib.save_compiled_plan(
+        planlib.compile_plan(plan, image_size=cfg.image_size),
+        os.path.join(plan_dir, "compiled"), step=step)
+    print(f"[train] exported inference plan -> {plan_dir} (step {step})",
+          flush=True)
+    return plan_dir
 
 
 def build_iterator(cfg, batch: int, seq: int, seed: int):
@@ -141,6 +162,11 @@ def train_loop(args) -> dict:
                 manager.save(step + 1, {"params": params, "opt": opt_state},
                              extra={"data_state": it.state_dict()},
                              blocking=False)
+                every = getattr(args, "export_plan_every", 0)
+                n_saves = (step + 1) // args.ckpt_every
+                if (every and cfg.family == "jpeg_resnet"
+                        and n_saves % every == 0):
+                    export_plan(cfg, params, args.ckpt_dir, step=step + 1)
             if interrupted["flag"]:
                 break
     finally:
@@ -150,12 +176,17 @@ def train_loop(args) -> dict:
     final_step = step + 1 if not interrupted["flag"] else step
     manager.save(final_step, {"params": params, "opt": opt_state},
                  extra={"data_state": it.state_dict()})
+    plan_dir = None
+    if cfg.family == "jpeg_resnet" and getattr(args, "export_plan", True):
+        # export point: the final checkpoint doubles as a serving handoff
+        plan_dir = export_plan(cfg, params, args.ckpt_dir, step=final_step)
     wall = time.time() - t_loop
     result = {
         "arch": cfg.name, "steps_run": final_step - start_step,
         "final_step": final_step, "losses": losses,
         "stragglers": straggler_log, "wall_s": wall,
         "interrupted": interrupted["flag"], "params": n_params,
+        "plan_dir": plan_dir,
     }
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
@@ -183,6 +214,16 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--export-plan", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="jpeg-resnet: fuse the final weights into an "
+                         "InferencePlan (+ compiled schedule) under "
+                         "<ckpt-dir>/plan so serve.py --plan-dir picks "
+                         "them up without a manual convert step")
+    ap.add_argument("--export-plan-every", type=int, default=0,
+                    help="additionally export the plan at every Nth "
+                         "periodic checkpoint save (counted in saves, "
+                         "not steps; 0 = final save only)")
     args = ap.parse_args()
     train_loop(args)
 

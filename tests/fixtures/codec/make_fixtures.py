@@ -1,0 +1,97 @@
+"""Regenerate the committed codec golden fixtures.
+
+Two tiny JPEGs are committed alongside their entropy-decoded coefficient
+``.npz`` files:
+
+* ``gray_q80.jpg``     — 40×56 grayscale, quality 80, 4:4:4 (trivially);
+* ``color_q85_420.jpg`` — 48×48 3-component, quality 85, 4:2:0 chroma.
+
+Both are encoded by **PIL/libjpeg** (an independent implementation) from
+deterministic closed-form images, so the bitstreams pin real-world JFIF
+output.  The ``.npz`` holds the quantized zigzag coefficients our decoder
+extracts; at generation time they are cross-validated against libjpeg's
+own pixel decode (dequantize + exact IDCT must match PIL's output to
+within its integer rounding), after which the committed arrays serve as
+the bit-exact regression reference for ``repro.codec.bitstream``.
+
+    PYTHONPATH=src python tests/fixtures/codec/make_fixtures.py
+"""
+import io
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def det_image(h: int, w: int, c: int = 1) -> np.ndarray:
+    """Deterministic closed-form test image, values in [0, 255]."""
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    planes = []
+    for k in range(c):
+        z = (np.sin(xx * (0.23 + 0.11 * k)) * np.cos(yy * 0.17)
+             + 0.5 * np.sin((xx + 2 * yy) * 0.061 * (k + 1))
+             + 0.002 * (xx - w / 2) * (yy - h / 2) / (1 + k))
+        z = (z - z.min()) / (z.max() - z.min())
+        planes.append(np.rint(z * 255.0))
+    return np.stack(planes) if c > 1 else planes[0]
+
+
+def validate(data: bytes, dec) -> None:
+    """Cross-check our decode against PIL's pixel decode (luma plane)."""
+    from PIL import Image
+
+    import jax.numpy as jnp
+    from repro.core import jpeg as J
+
+    pim = Image.open(io.BytesIO(data))
+    if pim.mode != "L":
+        pim.draft("YCbCr", None)
+        ref = np.asarray(pim.convert("YCbCr"), np.float64)[..., 0]
+    else:
+        ref = np.asarray(pim, np.float64)
+    deq = dec.coefficients[0] * dec.qtable(0).astype(np.float64)
+    own = np.asarray(J.jpeg_decode(jnp.asarray(deq[None]),
+                                   scaled=False))[0] + 128.0
+    own = np.clip(own, 0, 255)[: dec.height, : dec.width]
+    err = float(np.abs(own - ref).max())
+    assert err < 1.0, f"decoder disagrees with libjpeg: max err {err}"
+    print(f"  cross-validated vs PIL pixels: max err {err:.3f}")
+
+
+def save(name: str, data: bytes) -> None:
+    from repro.codec import bitstream as bs
+
+    dec = bs.decode_jpeg(data)
+    validate(data, dec)
+    with open(os.path.join(HERE, name + ".jpg"), "wb") as f:
+        f.write(data)
+    arrays = {"width": dec.width, "height": dec.height,
+              "restart_interval": dec.restart_interval}
+    for i, comp in enumerate(dec.components):
+        arrays[f"coef{i}"] = dec.coefficients[i]
+        arrays[f"qtable{i}"] = dec.qtable(i)
+        arrays[f"sampling{i}"] = np.array([comp.h, comp.v])
+    np.savez(os.path.join(HERE, name + ".npz"), **arrays)
+    print(f"  wrote {name}.jpg ({len(data)} bytes) + {name}.npz")
+
+
+def main() -> None:
+    from PIL import Image
+
+    print("gray_q80 (40x56, quality 80):")
+    im = Image.fromarray(np.uint8(det_image(40, 56)), "L")
+    buf = io.BytesIO()
+    im.save(buf, "JPEG", quality=80)
+    save("gray_q80", buf.getvalue())
+
+    print("color_q85_420 (48x48, quality 85, 4:2:0):")
+    rgb = np.uint8(det_image(48, 48, 3)).transpose(1, 2, 0)
+    im = Image.fromarray(rgb, "RGB")
+    buf = io.BytesIO()
+    im.save(buf, "JPEG", quality=85, subsampling=2)
+    save("color_q85_420", buf.getvalue())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Codec conformance: golden-fixture entropy decode + bitstream errors.
+
+The committed fixtures (``tests/fixtures/codec``) are PIL/libjpeg-encoded
+files whose entropy-decoded coefficients were cross-validated against
+libjpeg's own pixel output at generation time (see ``make_fixtures.py``);
+here the decode must reproduce them **bit-exactly**, and — when PIL is
+installed — the dequantize+IDCT of our integers must still match PIL's
+pixel decode to within its integer rounding.
+"""
+import io
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+from repro.core import jpeg as J
+from repro.codec import bitstream as bs
+
+try:
+    from PIL import Image
+
+    HAVE_PIL = True
+except ModuleNotFoundError:
+    HAVE_PIL = False
+
+FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "codec")
+FIXTURES = ("gray_q80", "color_q85_420")
+
+
+def _load(name):
+    with open(os.path.join(FIXDIR, name + ".jpg"), "rb") as f:
+        data = f.read()
+    golden = np.load(os.path.join(FIXDIR, name + ".npz"))
+    return data, golden
+
+
+@pytest.mark.parametrize("name", FIXTURES)
+def test_golden_decode_bit_exact(name):
+    data, golden = _load(name)
+    dec = bs.decode_jpeg(data)
+    assert dec.width == int(golden["width"])
+    assert dec.height == int(golden["height"])
+    assert dec.restart_interval == int(golden["restart_interval"])
+    for i, comp in enumerate(dec.components):
+        assert np.array_equal(dec.coefficients[i], golden[f"coef{i}"]), \
+            f"component {i} coefficients differ from golden"
+        assert np.array_equal(dec.qtable(i), golden[f"qtable{i}"])
+        assert (comp.h, comp.v) == tuple(golden[f"sampling{i}"])
+
+
+@pytest.mark.parametrize("name", FIXTURES)
+def test_golden_matches_libjpeg_pixels(name):
+    """Dequantize + exact IDCT of our integers == libjpeg's pixel decode
+    (to within libjpeg's integer rounding) — independent conformance."""
+    if not HAVE_PIL:
+        pytest.skip("PIL not installed")
+    data, _ = _load(name)
+    dec = bs.decode_jpeg(data)
+    pim = Image.open(io.BytesIO(data))
+    if pim.mode == "L":
+        ref = np.asarray(pim, np.float64)
+    else:
+        pim.draft("YCbCr", None)
+        ref = np.asarray(pim.convert("YCbCr"), np.float64)[..., 0]
+    deq = dec.coefficients[0] * dec.qtable(0).astype(np.float64)
+    own = np.asarray(J.jpeg_decode(jnp.asarray(deq[None]),
+                                   scaled=False))[0] + 128.0
+    own = np.clip(own, 0, 255)[: dec.height, : dec.width]
+    assert np.abs(own - ref).max() < 1.0
+
+
+def test_fixture_shapes_and_sampling():
+    _, golden = _load("color_q85_420")
+    # 4:2:0: luma on the full 6x6 grid, chroma on 3x3
+    assert golden["coef0"].shape == (6, 6, 64)
+    assert golden["coef1"].shape == (3, 3, 64)
+    assert tuple(golden["sampling0"]) == (2, 2)
+    assert tuple(golden["sampling1"]) == (1, 1)
+
+
+def test_blocks_reports_unpadded_dims():
+    data, _ = _load("gray_q80")
+    dec = bs.decode_jpeg(data)
+    assert dec.blocks(0) == (5, 7)  # 40x56
+
+
+def test_not_a_jpeg():
+    with pytest.raises(bs.JpegError):
+        bs.decode_jpeg(b"PNG not a jpeg")
+
+
+def test_truncated_stream():
+    data, _ = _load("gray_q80")
+    with pytest.raises(bs.JpegError):
+        bs.decode_jpeg(data[: len(data) // 2])
+
+
+def test_progressive_rejected_loudly():
+    if not HAVE_PIL:
+        pytest.skip("PIL not installed")
+    im = Image.fromarray(np.uint8(np.arange(64 * 64).reshape(64, 64) % 256),
+                         "L")
+    buf = io.BytesIO()
+    im.save(buf, "JPEG", quality=75, progressive=True)
+    with pytest.raises(bs.UnsupportedJpegError):
+        bs.decode_jpeg(buf.getvalue())
+
+
+def test_huffman_lut_canonical_codes():
+    # two codes: '0' -> 5, '10' -> 9 (canonical assignment)
+    counts = np.zeros(16, np.int64)
+    counts[0], counts[1] = 1, 1
+    t = bs.build_huffman_lut(counts, np.array([5, 9]))
+    assert t.lut[0b0000000000000000] == (5 << 8) | 1
+    assert t.lut[0b0111111111111111] == (5 << 8) | 1
+    assert t.lut[0b1000000000000000] == (9 << 8) | 2
+    assert t.lut[0b1011111111111111] == (9 << 8) | 2
+    assert t.lut[0b1100000000000000] == -1  # unassigned prefix
+
+
+def test_bad_dht_rejected():
+    counts = np.zeros(16, np.int64)
+    counts[0] = 3  # three 1-bit codes cannot exist
+    with pytest.raises(bs.JpegError):
+        bs.build_huffman_lut(counts, np.array([1, 2, 3]))

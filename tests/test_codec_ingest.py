@@ -1,0 +1,234 @@
+"""End-to-end ingest: bytes → logits parity, tile-packed entry, the
+real-file iterator, the prefetch lifecycle fix, and empirical-profile
+band autotuning."""
+import argparse
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+from repro.core import dispatch as DSP
+from repro.core import jpeg as J
+from repro.core import plan as PL
+from repro.core import resnet as R
+from repro.codec import bitstream as bs
+from repro.codec import encode as enc
+from repro.codec import ingest as ing
+from repro.data import pipeline as pipe
+
+FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "codec")
+SPEC = R.ResNetSpec(in_channels=3, widths=(4, 6, 8), num_classes=10)
+GRID = (4, 4)  # 3 stages -> 32x32 input
+
+
+@pytest.fixture(scope="module")
+def small_plan():
+    params, state = R.init_resnet(jax.random.PRNGKey(0), SPEC)
+    cfg = DSP.DispatchConfig(path="reference", bands=64)
+    return PL.build_plan(params, state, SPEC, dispatch=cfg)
+
+
+def _fixture_bytes(name="gray_q80"):
+    with open(os.path.join(FIXDIR, name + ".jpg"), "rb") as f:
+        return f.read()
+
+
+def test_bytes_to_logits_parity_against_pixel_route(small_plan):
+    """Acceptance: a committed fixture through the bytes-in path matches
+    the reference route (pixel decode → jpeg_encode → plan walk)."""
+    data = _fixture_bytes()
+    # bytes route: entropy decode -> normalize -> plan walk (no pixels)
+    coef = ing.decode_bytes(data, quality=SPEC.quality, grid=GRID,
+                            channels=3)
+    logits = np.asarray(PL.apply_plan(small_plan, jnp.asarray(coef[None])))
+
+    # reference route: decode the file to pixels, crop the same window
+    # fit_grid used, re-encode with core.jpeg, walk the same plan
+    dec = bs.decode_jpeg(data)
+    deq = dec.coefficients[0] * dec.qtable(0).astype(np.float64)
+    px = np.asarray(J.jpeg_decode(jnp.asarray(deq[None]), scaled=False))[0]
+    px = px / 128.0  # network pixel convention
+    by, bx = dec.coefficients[0].shape[:2]
+    oy, ox = ((by - GRID[0]) // 2) * 8, ((bx - GRID[1]) // 2) * 8
+    px = px[oy: oy + GRID[0] * 8, ox: ox + GRID[1] * 8]
+    ref_coef = np.asarray(J.jpeg_encode(jnp.asarray(px[None]),
+                                        quality=SPEC.quality, scaled=True))
+    ref_coef = np.repeat(np.moveaxis(ref_coef, 0, 2)[None], 3, axis=3)
+    assert np.abs(coef[None] - ref_coef).max() < 1e-4
+    ref_logits = np.asarray(PL.apply_plan(small_plan,
+                                          jnp.asarray(ref_coef)))
+    assert np.abs(logits - ref_logits).max() < 1e-3
+    assert (logits.argmax(-1) == ref_logits.argmax(-1)).all()
+
+
+def test_compiled_packed_entry_matches_full_width(small_plan):
+    cp = PL.compile_plan(small_plan, image_size=32)
+    datas = [_fixture_bytes("gray_q80"), _fixture_bytes("color_q85_420")]
+    full, _ = ing.ingest_batch(datas, quality=SPEC.quality, grid=GRID,
+                               channels=3)
+    packed, _ = ing.ingest_batch(datas, quality=SPEC.quality, grid=GRID,
+                                 channels=3, pack_width=cp.stem.w_in)
+    assert packed.shape == (2, 4, 4, 3 * cp.stem.w_in)
+    a = np.asarray(PL.apply_compiled(cp, jnp.asarray(full)))
+    b = np.asarray(PL.apply_compiled_packed(cp, jnp.asarray(packed)))
+    assert np.abs(a - b).max() < 1e-5
+
+
+def test_compiled_packed_rejects_wrong_width(small_plan):
+    cp = PL.compile_plan(small_plan, image_size=32)
+    bad = jnp.zeros((1, 4, 4, 3 * (cp.stem.w_in + 8)))
+    with pytest.raises(ValueError):
+        PL.apply_compiled_packed(cp, bad)
+
+
+def test_ingest_stats_and_merge():
+    datas = [_fixture_bytes("gray_q80")] * 2
+    _, s1 = ing.ingest_batch(datas, quality=50, grid=GRID, channels=3)
+    assert s1.images == 2 and s1.blocks == 2 * 4 * 4 * 3
+    assert (s1.energy >= 0).all()
+    assert ((0 <= s1.occupancy) & (s1.occupancy <= 1)).all()
+    assert s1.occupancy[0] > s1.occupancy[-1]  # energy compaction
+    merged = ing.merge_stats([s1, s1])
+    assert merged.images == 4
+    assert np.allclose(merged.energy, s1.energy)
+    assert ing.merge_stats([]).images == 0
+
+
+def test_bands_for_profile_monotone_and_empirical():
+    lowpass = np.zeros(64)
+    lowpass[:8] = 1.0
+    assert PL.bands_for_profile(lowpass, 0.95) == 8
+    flat = np.ones(64)
+    assert PL.bands_for_profile(flat, 0.95) == 64
+    prev = 64
+    profile = 1.0 / (np.arange(64) + 1.0) ** 2
+    for budget in (0.999, 0.99, 0.9, 0.5, 0.1):
+        b = PL.bands_for_profile(profile, budget)
+        assert b <= prev
+        prev = b
+    with pytest.raises(ValueError):
+        PL.bands_for_profile(np.zeros(64), 0.9)
+    with pytest.raises(ValueError):
+        PL.bands_for_profile(-np.ones(64), 0.9)
+
+
+def test_autotune_uses_empirical_profile(capsys):
+    params, state = R.init_resnet(jax.random.PRNGKey(1), SPEC)
+    lowpass = np.zeros(64)
+    lowpass[:16] = 1.0
+    occ = np.zeros(64)
+    occ[:24] = 0.5
+    bands = PL.autotune_bands(params, state, SPEC, profile=lowpass,
+                              occupancy=occ)
+    assert set(bands.values()) == {16}
+    out = capsys.readouterr().out
+    assert "energy_kept" in out and "occupancy_dropped" in out
+
+
+def test_jpeg_file_iterator_checkpoint_semantics(tmp_path):
+    it = pipe.jpeg_file_iterator(FIXDIR, batch=3, grid=GRID, channels=3,
+                                 seed=7)
+    b0, b1 = next(it), next(it)
+    assert b0["coefficients"].shape == (3, 4, 4, 3, 64)
+    assert b0["labels"].tolist() == [-1, -1, -1]
+    # restore from the two-integer checkpoint state and replay
+    it2 = pipe.jpeg_file_iterator(FIXDIR, batch=3, grid=GRID, channels=3,
+                                  seed=0)
+    it2.load_state_dict({"seed": 7, "step": 1})
+    assert np.array_equal(next(it2)["coefficients"], b1["coefficients"])
+
+
+def test_jpeg_file_iterator_packed_and_labels():
+    it = pipe.jpeg_file_iterator(
+        FIXDIR, batch=2, grid=GRID, channels=3, seed=1,
+        label_fn=lambda p: len(os.path.basename(p)), pack_width=16)
+    b = next(it)
+    assert b["coefficients"].shape == (2, 4, 4, 3 * 16)
+    assert (b["labels"] > 0).all()
+    with pytest.raises(ValueError):
+        pipe.jpeg_file_iterator([], batch=1, grid=GRID)
+
+
+def test_serve_bytes_in_path(tmp_path):
+    """The committed fixtures served through launch/serve.py's bytes-in
+    request path, end to end (plan built, compiled, tile-packed ingest)."""
+    from repro.launch.serve import serve_jpeg_resnet
+
+    ns = argparse.Namespace(
+        arch="jpeg-resnet", reduced=True, batch=2, requests=2, ctx=0,
+        max_new=1, seed=0, dispatch=None, bands=None,
+        plan_dir=str(tmp_path / "plan"), autotune_bands=False,
+        compiled=None, ingest="bytes", jpeg_dir=FIXDIR)
+    out = serve_jpeg_resnet(ns)
+    assert out["completed"] == 2
+    assert out["ingest"] == "bytes"
+    assert out["plan"]["compiled"]
+    assert out["ingest_stats"]["images"] >= 2
+    assert out["ingest_stats"]["bytes_in"] > 0
+
+
+# ---------------------------------------------------------------------------
+# prefetch lifecycle (the producer-thread leak fix)
+# ---------------------------------------------------------------------------
+
+
+def _thread_names():
+    return {t.name for t in threading.enumerate()}
+
+
+def test_prefetch_joins_thread_on_early_close():
+    produced = []
+
+    def source():
+        for i in range(10_000):
+            produced.append(i)
+            yield i
+
+    before = threading.active_count()
+    gen = pipe.prefetch(source(), depth=2)
+    assert next(gen) == 0
+    gen.close()  # consumer walks away mid-stream
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() == before, "producer thread leaked"
+    n = len(produced)
+    time.sleep(0.05)
+    assert len(produced) == n, "producer kept running after close"
+
+
+def test_prefetch_exhaustion_joins_thread():
+    before = threading.active_count()
+    assert list(pipe.prefetch(iter(range(5)), depth=2)) == [0, 1, 2, 3, 4]
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() == before
+
+
+def test_prefetch_propagates_source_exception():
+    def source():
+        yield 1
+        raise RuntimeError("boom")
+
+    gen = pipe.prefetch(source(), depth=2)
+    assert next(gen) == 1
+    with pytest.raises(RuntimeError, match="boom"):
+        next(gen)
+
+
+def test_prefetch_consumer_exception_joins_thread():
+    before = threading.active_count()
+    with pytest.raises(ValueError):
+        for i in pipe.prefetch(iter(range(1000)), depth=2):
+            raise ValueError("consumer failed")
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() == before
