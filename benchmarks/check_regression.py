@@ -6,8 +6,14 @@ Speedups are same-run *ratios* (e.g. compiled-over-plan on the same
 machine), so they are comparable across hosts in a way raw microseconds
 are not.  Rows are matched by name on a prefix (default
 ``fig5/infer_speedup_``); rows present in only one file are reported but
-not compared (modes come and go across PRs), and the guard fails if the
-intersection is empty — a silently-empty comparison must not pass.
+never compared (modes come and go across PRs).  In particular a row
+present only in the *fresh* run — a brand-new benchmark mode, e.g. the
+first run of the ``serving`` overload sweep — is **informational**: it
+prints as ``INFO new row`` and cannot fail the guard until a baseline
+containing it is committed.  The guard still fails whenever the
+comparison is empty — no shared rows, or a baseline with no guarded rows
+at all (corrupt file / wrong prefix) — a silently-empty comparison must
+not pass.
 
     python -m benchmarks.check_regression baseline.json BENCH_fig5.json \
         --max-regression 0.2
@@ -58,9 +64,14 @@ def main() -> None:
     fresh = load_speedups(args.fresh, args.prefix)
     compared, failures = 0, []
     for name in sorted(set(base) | set(fresh)):
-        if name not in base or name not in fresh:
-            where = "baseline" if name in base else "fresh"
-            print(f"SKIP {name}: only in {where}")
+        if name not in base:
+            # a mode's first run: report, never fail — the row becomes
+            # guarded once a baseline containing it is committed
+            print(f"INFO new row {name}: {fresh[name]:.2f}x "
+                  "(not in baseline; informational until committed)")
+            continue
+        if name not in fresh:
+            print(f"SKIP {name}: only in baseline (mode not run)")
             continue
         compared += 1
         floor = base[name] * (1.0 - args.max_regression)
@@ -70,7 +81,16 @@ def main() -> None:
         if fresh[name] < floor:
             failures.append(name)
     if not compared:
-        print("FAIL: no speedup rows shared between baseline and fresh run")
+        # an empty comparison must not pass: a truncated/corrupt baseline
+        # or a typo'd --prefix would otherwise wave every regression
+        # through with nothing but log noise
+        if not base:
+            print("FAIL: baseline has no guarded speedup rows "
+                  f"(prefix {args.prefix!r}) — corrupt baseline or wrong "
+                  "prefix")
+        else:
+            print("FAIL: baseline speedup rows "
+                  f"{sorted(base)} absent from the fresh run")
         sys.exit(1)
     if failures:
         print(f"perf guard failed: {', '.join(failures)}")

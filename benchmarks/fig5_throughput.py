@@ -22,6 +22,12 @@ Modes (``--modes``, default all):
   normalization, never pixels) into the plan walk / the compiled
   schedule's tile-packed stem, vs the spatial route that must decompress
   first — the paper's end-to-end serving claim, measured from the wire;
+* ``serving``  — the **overload sweep**: a saturating burst of
+  single-image requests through the band-elastic runtime
+  (``repro.serving``), fixed top-tier configuration vs the elastic QoS
+  ladder that degrades bands under load — throughput, per-request
+  latency percentiles, tier switches, and top-1 agreement of every
+  request the elastic run served at the top tier;
 * ``train``    — one SGD step, both domains.
 
 Every row lands in ``BENCH_fig5.json`` tagged with its mode, alongside the
@@ -39,6 +45,7 @@ import argparse
 import json
 import platform
 import subprocess
+import time
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +62,8 @@ from repro.data.synthetic import image_batch
 
 BATCH = 40  # the paper's batch size
 SPEC = R.ResNetSpec(widths=(8, 12, 16), num_classes=10)
-ALL_MODES = ("spatial", "dispatch", "plan", "compiled", "ingest", "train")
+ALL_MODES = ("spatial", "dispatch", "plan", "compiled", "ingest", "serving",
+             "train")
 DEFAULT_OUT = "BENCH_fig5.json"
 
 
@@ -101,6 +109,9 @@ def run(emit, *, reduced: bool = False, modes=ALL_MODES,
     if "ingest" in modes:
         mode_tag[0] = "ingest"
         _run_ingest(record, params, state, coef, batch, iters)
+    if "serving" in modes:
+        mode_tag[0] = "serving"
+        _run_serving(record, params, state, coef, batch, reduced)
     if "train" in modes:
         mode_tag[0] = "train"
         _run_train(record, params, state, coef, y, batch)
@@ -337,6 +348,88 @@ def _run_ingest(emit, params, state, coef, batch, iters):
     emit("fig5/ingest_speedup_vs_spatial", 0.0,
          f"{t_sp / t_comp2:.2f}x bytes->logits over spatial decompress+"
          f"classify", speedup=t_sp / t_comp2)
+
+
+def _run_serving(emit, params, state, coef, batch, reduced):
+    # ---- overload sweep: fixed top tier vs the band-elastic ladder --------
+    # A saturating burst of single-image requests (several batches deep, no
+    # pacing) hits each configuration; both run the identical scheduler and
+    # request stream, so the throughput ratio isolates the QoS policy.  The
+    # fixed configuration is a one-rung ladder pinned at the plan's own
+    # bands — today's serve default; the elastic configuration degrades
+    # bands under queue pressure and recovers as it drains.  The sweep runs
+    # the serve-scale network (the reduced jpeg-resnet widths) rather than
+    # the tiny fig5 parity spec: band elasticity is a *compute* lever, and
+    # on a model small enough for scheduler overhead to dominate the knob
+    # has nothing to trade.
+    from repro import serving as sv
+
+    spec = R.ResNetSpec(widths=(16, 32, 64), num_classes=10)
+    params, state = R.init_resnet(jax.random.PRNGKey(0), spec)
+    base_cfg = DSP.DispatchConfig(path="reference", bands=64)
+    # full-band plan: the fixed configuration serves the paper-exact
+    # bands=64 operators (the serve default when nothing is autotuned),
+    # which is precisely the configuration with headroom to trade
+    plan = PL.build_plan(params, state, spec, dispatch=base_cfg)
+    plan_fn = jax.jit(lambda c: PL.apply_plan(plan, c))
+    ref_logits = np.asarray(plan_fn(coef))
+    images = [np.asarray(coef[i]) for i in range(coef.shape[0])]
+    n_req = 96 if reduced else 192
+    slots = min(4, batch)
+    grid = coef.shape[1:3]
+
+    ladder_el = sv.build_ladder(plan, caps=sv.DEFAULT_CAPS)
+    # the fixed configuration is exactly the elastic ladder's top rung —
+    # reuse the compiled tier instead of paying compile_plan again
+    ladder_fx = sv.PlanLadder((ladder_el.tiers[0],), plan, (None,),
+                              ladder_el.image_size, ladder_el.vmem_budget)
+
+    def run_config(ladder):
+        metrics = sv.ServeMetrics()
+        sched = sv.BandElasticScheduler(ladder, batch=slots,
+                                        metrics=metrics, max_pending=n_req,
+                                        grid=grid, channels=coef.shape[3])
+        with sched:
+            sched.warmup(kinds=("coefficients",))
+            t0 = time.perf_counter()
+            reqs = [sched.submit(images[i % len(images)])
+                    for i in range(n_req)]
+            sched.drain()
+            wall = time.perf_counter() - t0
+        return reqs, wall, metrics.report()
+
+    fixed_reqs, fixed_wall, fixed_rep = run_config(ladder_fx)
+    el_reqs, el_wall, el_rep = run_config(ladder_el)
+
+    # fidelity gate: every request the elastic run served at the top tier
+    # must match the per-layer plan walk's top-1 on that image
+    top = [(i, r) for i, r in enumerate(el_reqs) if r.tier == "top"]
+    agree = float(np.mean([
+        np.asarray(r.result()).argmax(-1)
+        == ref_logits[i % len(images)].argmax(-1)
+        for i, r in top])) if top else 1.0
+    tiers_used = sorted({r.tier for r in el_reqs})
+    lat_f, lat_e = fixed_rep["latency_ms"], el_rep["latency_ms"]
+    tp_f = n_req / fixed_wall
+    tp_e = n_req / el_wall
+
+    emit("fig5/serving_fixed_top", fixed_wall / n_req * 1e6,
+         f"img_per_s={tp_f:.1f} p50={lat_f['p50_ms']:.0f}ms "
+         f"p95={lat_f['p95_ms']:.0f}ms p99={lat_f['p99_ms']:.0f}ms")
+    emit("fig5/serving_elastic", el_wall / n_req * 1e6,
+         f"img_per_s={tp_e:.1f} p50={lat_e['p50_ms']:.0f}ms "
+         f"p95={lat_e['p95_ms']:.0f}ms p99={lat_e['p99_ms']:.0f}ms "
+         f"switches={len(el_rep['tier_switches'])} "
+         f"tiers={'/'.join(tiers_used)} top1_agree_top={agree:.3f}")
+    # guarded once a baseline carrying it is committed (the first run
+    # prints as INFO in check_regression); the committed baseline floors
+    # this deliberately below the observed range — the ratio is a
+    # saturated-throughput A/B on one machine but still noisier than the
+    # interleaved time_pair rows
+    emit("fig5/infer_speedup_serving_elastic", 0.0,
+         f"{tp_e / tp_f:.2f}x saturated throughput over fixed top tier "
+         f"(band-elastic QoS, {len(el_rep['tier_switches'])} switches, "
+         f"top1_agree_top={agree:.3f})", speedup=tp_e / tp_f)
 
 
 def _run_train(emit, params, state, coef, y, batch):

@@ -1,0 +1,60 @@
+"""Band-elastic QoS serving walkthrough (``repro.serving``).
+
+Builds the reduced jpeg-resnet's convert-once plan, compiles it into a
+ladder of band tiers, and serves a saturating burst of single-image
+requests through the async scheduler — watching the QoS policy degrade
+bands as the queue builds and recover as it drains:
+
+    PYTHONPATH=src python examples/serve_qos.py
+    PYTHONPATH=src python examples/serve_qos.py --ingest bytes --requests 64
+
+Everything here is the same code path ``launch/serve.py --qos`` drives;
+this script just narrates the report.
+"""
+import argparse
+
+from repro.launch.serve import serve_jpeg_resnet
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=48,
+                    help="single-image requests, submitted as one burst")
+    ap.add_argument("--tiers", default=None,
+                    help="ladder caps, e.g. 'auto,48,32,24' (default)")
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--ingest", default="coefficients",
+                    choices=("coefficients", "bytes"))
+    ap.add_argument("--plan-dir", default=None)
+    args = ap.parse_args()
+    ns = argparse.Namespace(arch="jpeg-resnet", reduced=True, qos=True,
+                            batch=args.batch, requests=args.requests,
+                            ctx=0, max_new=1, seed=0, dispatch=None,
+                            bands=None, plan_dir=args.plan_dir,
+                            autotune_bands=False, compiled=None,
+                            ingest=args.ingest, jpeg_dir=None,
+                            tiers=args.tiers, deadline_ms=args.deadline_ms,
+                            max_queue=None, report_out=None)
+    out = serve_jpeg_resnet(ns)
+    qos = out["qos"]
+    lat = out["latency_ms"]
+    print(f"\nserved {out['images']} requests at "
+          f"{out['images_per_s']:.1f} img/s "
+          f"(p50 {lat['p50_ms']:.0f}ms / p95 {lat['p95_ms']:.0f}ms / "
+          f"p99 {lat['p99_ms']:.0f}ms), {out['rejected']} rejected")
+    for t in qos["tiers"]:
+        stats = qos["per_tier"].get(t["name"])
+        if stats:
+            print(f"  tier {t['name']:<4} (bands {t['bands']}): "
+                  f"{stats['images']} images in {stats['batches']} batches "
+                  f"at {stats['images_per_s']:.1f} img/s")
+    for sw in qos["tier_switches"]:
+        print(f"  switch @batch {sw['batch']}: {sw['from']} -> {sw['to']} "
+              f"({sw['reason']})")
+    print(f"  top-tier top-1 agreement vs plan walk: "
+          f"{qos['top1_agree_top_tier']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,9 +54,31 @@ __all__ = [
 # marker bytes (second byte after 0xFF)
 SOI, EOI, SOS, DQT, DHT, DRI, COM = 0xD8, 0xD9, 0xDA, 0xDB, 0xC4, 0xDD, 0xFE
 SOF0 = 0xC0
+DAC = 0xCC  # arithmetic-coding conditioning — arithmetic streams only
 RST0, RST7 = 0xD0, 0xD7
 _SOF_ALL = set(range(0xC0, 0xD0)) - {0xC4, 0xC8, 0xCC}  # SOFn family
 _SUPPORTED_SOF = {0xC0, 0xC1}  # baseline + extended sequential (Huffman)
+
+#: human names for the SOFn variants this decoder rejects.
+_SOF_KIND = {
+    0xC2: "progressive (SOF2)",
+    0xC3: "lossless (SOF3)",
+    0xC5: "differential sequential (SOF5)",
+    0xC6: "differential progressive (SOF6)",
+    0xC7: "differential lossless (SOF7)",
+    0xC9: "arithmetic-coded sequential (SOF9)",
+    0xCA: "arithmetic-coded progressive (SOF10)",
+    0xCB: "arithmetic-coded lossless (SOF11)",
+    0xCD: "differential arithmetic-coded sequential (SOF13)",
+    0xCE: "differential arithmetic-coded progressive (SOF14)",
+    0xCF: "differential arithmetic-coded lossless (SOF15)",
+}
+
+_UNSUPPORTED_HINT = (
+    "supported markers are SOF0 (baseline) and SOF1 (extended sequential "
+    "Huffman) — re-encode the file as baseline (libjpeg/PIL defaults), or "
+    'see the ROADMAP item "progressive (SOF2) decode" for the planned '
+    "extension")
 
 
 class JpegError(ValueError):
@@ -243,11 +265,8 @@ def _parse_dht(payload: bytes, tables: dict[tuple[int, int], HuffmanTable]
 
 def _parse_sof(marker: int, payload: bytes):
     if marker not in _SUPPORTED_SOF:
-        kind = {0xC2: "progressive", 0xC3: "lossless"}.get(
-            marker, f"SOF{marker - 0xC0}")
-        raise UnsupportedJpegError(
-            f"{kind} JPEG — only baseline/extended sequential Huffman "
-            f"(SOF0/SOF1) is supported")
+        kind = _SOF_KIND.get(marker, f"SOF{marker - 0xC0}")
+        raise UnsupportedJpegError(f"{kind} JPEG; {_UNSUPPORTED_HINT}")
     precision = payload[0]
     if precision != 8:
         raise UnsupportedJpegError(f"{precision}-bit precision (want 8)")
@@ -393,6 +412,10 @@ def decode_jpeg(data: bytes) -> DecodedJpeg:
             _parse_dqt(payload, qtables)
         elif marker == DHT:
             _parse_dht(payload, huffman)
+        elif marker == DAC:
+            raise UnsupportedJpegError(
+                "arithmetic-coded JPEG (DAC conditioning marker); "
+                + _UNSUPPORTED_HINT)
         elif marker == DRI:
             restart_interval = _u16(payload, 0)
         elif marker in _SOF_ALL:

@@ -694,13 +694,15 @@ def _repack_width(h: jnp.ndarray, c: int, w_to: int) -> jnp.ndarray:
 
 
 def _apply_stem(stem: CompiledStem, coef: jnp.ndarray, phi: int, path: str,
-                cfg: dispatchlib.DispatchConfig) -> jnp.ndarray:
+                cfg: dispatchlib.DispatchConfig,
+                executor: str | None = None) -> jnp.ndarray:
     from repro.kernels import fused_block as fblib
     from repro.kernels import tiling
 
     n, bh, bw = coef.shape[:3]
     if stem.kind == "packed":
-        if path == "pallas" and not dispatchlib._pallas_delegates(cfg):
+        if executor == "gemm" or (path == "pallas"
+                                  and not dispatchlib._pallas_delegates(cfg)):
             h = coef[..., : stem.w_in].reshape(n, bh, bw,
                                                stem.cin * stem.w_in)
             h = tiling.packed_conv_apply(h, stem.conv)
@@ -736,24 +738,35 @@ def _apply_layers_block(blk: CompiledBlock, h: jnp.ndarray, phi: int,
 
 
 def apply_compiled(cp: CompiledPlan, coef: jnp.ndarray,
-                   cfg: dispatchlib.DispatchConfig | None = None
-                   ) -> jnp.ndarray:
+                   cfg: dispatchlib.DispatchConfig | None = None, *,
+                   executor: str | None = None) -> jnp.ndarray:
     """Execute the compiled schedule: packed stem, then one fused (or
     fallback) step per residual block, then the DC-read head.
 
     Mathematically identical to :func:`apply_plan` on the source plan
     (coefficients beyond each layer's band cutoff are zero in both
     layouts); differs only in float summation order.
+
+    ``executor=None`` honors each step's compile-time path resolution
+    (the Mosaic megakernel on TPU, the spatial-resident XLA lowering
+    elsewhere).  ``executor="gemm"`` forces the **transform-domain
+    tile-packed GEMM lowering** (``kernels.fused_block.
+    fused_block_reference`` — the megakernel's operand-identical XLA
+    twin) on every fused step: unlike the spatial lowering, whose conv
+    cost is independent of the band budget, its FLOPs scale with the
+    packed widths — this is the executor whose latency the §6 band knob
+    actually moves, hence what the band-elastic serving ladder runs
+    off-TPU.
     """
     cfg = cp.cfg if cfg is None else cfg
     path = (cp.meta or {}).get("path", "reference")
-    h = _apply_stem(cp.stem, coef, cp.phi, path, cfg)
-    return _run_blocks(cp, h, cfg)
+    h = _apply_stem(cp.stem, coef, cp.phi, path, cfg, executor)
+    return _run_blocks(cp, h, cfg, executor)
 
 
 def apply_compiled_packed(cp: CompiledPlan, packed: jnp.ndarray,
-                          cfg: dispatchlib.DispatchConfig | None = None
-                          ) -> jnp.ndarray:
+                          cfg: dispatchlib.DispatchConfig | None = None, *,
+                          executor: str | None = None) -> jnp.ndarray:
     """Execute the compiled schedule from a **tile-packed** stem input.
 
     ``packed`` is ``(N, bh, bw, Cin·w_in)`` with ``w_in =
@@ -772,8 +785,9 @@ def apply_compiled_packed(cp: CompiledPlan, packed: jnp.ndarray,
         raise ValueError(
             f"packed input has per-channel width {k / st.cin:g}, "
             f"stem expects w_in={st.w_in} (cin={st.cin})")
-    if st.kind == "packed" and path == "pallas" \
-            and not dispatchlib._pallas_delegates(cfg):
+    if st.kind == "packed" and (
+            executor == "gemm"
+            or (path == "pallas" and not dispatchlib._pallas_delegates(cfg))):
         from repro.kernels import tiling
 
         h = tiling.packed_conv_apply(packed, st.conv)
@@ -785,21 +799,29 @@ def apply_compiled_packed(cp: CompiledPlan, packed: jnp.ndarray,
         from repro.core.conv import pad_bands
 
         coef = pad_bands(packed.reshape(n, bh, bw, st.cin, st.w_in))
-        h = _apply_stem(st, coef, cp.phi, path, cfg)
-    return _run_blocks(cp, h, cfg)
+        h = _apply_stem(st, coef, cp.phi, path, cfg, executor)
+    return _run_blocks(cp, h, cfg, executor)
 
 
 def _run_blocks(cp: CompiledPlan, h: jnp.ndarray,
-                cfg: dispatchlib.DispatchConfig) -> jnp.ndarray:
+                cfg: dispatchlib.DispatchConfig,
+                executor: str | None = None) -> jnp.ndarray:
     """Shared post-stem walk: fused/fallback steps, DC-read head."""
+    from repro.kernels import fused_block as fblib
+
     cur_w = cp.stem.w_out
     h = shard(h, "batch", None, None, None)
     for blk in cp.blocks:
         if blk.w_in != cur_w:
             h = _repack_width(h, blk.cin, blk.w_in)
         if blk.kind == "fused":
-            h = dispatchlib.fused_block(h, blk, cp.phi, path=blk.path,
-                                        cfg=cfg)
+            if executor == "gemm":
+                h = fblib.fused_block_reference(h, blk.conv1, blk.asm_mid,
+                                                blk.conv2, blk.asm_out,
+                                                blk.proj)
+            else:
+                h = dispatchlib.fused_block(h, blk, cp.phi, path=blk.path,
+                                            cfg=cfg)
         else:
             h = _apply_layers_block(blk, h, cp.phi, cfg)
         cur_w = blk.w_out

@@ -18,6 +18,17 @@ from a deterministic synthetic stream of *mixed-quality* encodes
 (qualities 35/50/75/90 through ``codec.encode_pixels``), exercising the
 per-image quantization normalization that lets one plan serve them all.
 
+With ``--qos`` the process serves through the **band-elastic runtime**
+(``repro.serving``): the plan is compiled into a ladder of band tiers
+(``--tiers``, default autotuned/48/32/24) and an async scheduler with
+admission control and per-request deadlines (``--deadline-ms``) picks the
+tier per batch from queue depth + deadline slack — degrading bands under
+overload, recovering as the queue drains.  The report then carries
+per-request latency percentiles, per-tier throughput, tier-switch events,
+and ingest occupancy (``--report-out`` writes it to a file).  Without
+``--qos`` the original fixed-band slot loop serves, but still reports
+p50/p95/p99 per-request latency through ``serving.metrics``.
+
 jpeg-resnet serving is **plan-backed** (convert-once): the process restores
 an :class:`repro.core.plan.InferencePlan` from ``--plan-dir`` — fused
 batch norm, per-layer autotuned bands, apply paths resolved at build time
@@ -45,6 +56,7 @@ import argparse
 import json
 import os
 import time
+from typing import Any
 
 import numpy as np
 import jax
@@ -55,7 +67,7 @@ from repro.core import dispatch as dispatchlib
 from repro.models.registry import build_model
 
 __all__ = ["main", "serve_lm", "serve_jpeg_resnet", "prepare_plan",
-           "jpeg_byte_requests"]
+           "prepare_ladder", "parse_tiers", "jpeg_byte_requests"]
 
 #: quality mix of the synthetic byte stream — one compiled plan serves all
 #: of them through codec.normalize's per-image qtable rescale.
@@ -256,6 +268,151 @@ def prepare_plan(args, cfg, dcfg):
     return plan, compiled, info
 
 
+def parse_tiers(spec) -> tuple:
+    """``--tiers`` string → ladder caps: ``"auto,48,32,24"`` →
+    ``(None, 48, 32, 24)`` (``auto``/``top``/``none`` = the plan's own
+    band assignment, untouched).  None/empty → the default ladder."""
+    from repro.serving import DEFAULT_CAPS
+
+    if not spec:
+        return DEFAULT_CAPS
+    caps = []
+    for tok in str(spec).split(","):
+        tok = tok.strip().lower()
+        caps.append(None if tok in ("auto", "top", "none") else int(tok))
+    return tuple(caps)
+
+
+def prepare_ladder(args, cfg, plan, plan_dir):
+    """Restore the tier ladder from ``plan_dir``, rebuilding when absent
+    or when its caps disagree with ``--tiers`` (same convert-once
+    contract as :func:`prepare_plan` — tiers re-derive bit-exactly from
+    the restored plan)."""
+    from repro import serving
+
+    caps = parse_tiers(getattr(args, "tiers", None))
+    ladder = None
+    try:
+        ladder = serving.load_ladder(plan_dir, plan=plan)
+        if ladder.caps != caps:
+            ladder = None  # different ladder requested — rebuild
+    except (FileNotFoundError, ValueError, KeyError):
+        ladder = None
+    if ladder is None:
+        ladder = serving.build_ladder(plan, caps=caps,
+                                      image_size=cfg.image_size)
+        serving.save_ladder(ladder, plan_dir, save_base=False)
+    return ladder
+
+
+def _qos_request_source(args, cfg, seed: int):
+    """Per-request payload stream for the QoS runtime: ``fn(i)`` returns
+    one image's payload — a coefficient tensor ``(bh, bw, C, 64)`` or one
+    JPEG file's bytes — drawn from the same sources the slot loop uses."""
+
+    def per_item(fetch_batch):
+        # requests are submitted strictly in order, so one batch of
+        # payloads is materialised at a time and evicted on rollover
+        cache: dict[int, Any] = {}
+
+        def fn(i: int):
+            step = i // args.batch
+            if step not in cache:
+                cache.clear()
+                cache[step] = fetch_batch(step)
+            return cache[step][i % args.batch]
+
+        return fn
+
+    if getattr(args, "ingest", "coefficients") == "bytes":
+        return per_item(jpeg_byte_requests(args, cfg, seed)), "bytes"
+
+    from repro.data import jpeg_iterator
+
+    it = jpeg_iterator(seed, args.batch, cfg.image_size, cfg.in_channels,
+                       cfg.num_classes)
+    return per_item(
+        lambda step: np.asarray(next(it)["coefficients"])), "coefficients"
+
+
+def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
+    """Serve through the band-elastic runtime: saturating burst of
+    single-image requests → admission control, per-batch tier selection,
+    degradation under overload, recovery on drain."""
+    from repro import serving
+    from repro.core import plan as planlib
+
+    ladder = prepare_ladder(args, cfg, plan, plan_info["dir"])
+    names = [t.name for t in ladder.tiers]
+    print(f"[serve] band-elastic ladder: "
+          + " > ".join(f"{t.name}(bands {min(t.bands.values())}-"
+                       f"{max(t.bands.values())})" for t in ladder.tiers))
+    n_blocks = cfg.image_size // 8
+    total = args.requests
+    deadline_s = (args.deadline_ms / 1e3
+                  if getattr(args, "deadline_ms", None) else None)
+    max_pending = getattr(args, "max_queue", None) or total
+    metrics = serving.ServeMetrics()
+    payload_of, kind = _qos_request_source(args, cfg, args.seed)
+
+    sched = serving.BandElasticScheduler(
+        ladder, batch=args.batch, metrics=metrics, max_pending=max_pending,
+        grid=(n_blocks, n_blocks), channels=cfg.in_channels)
+    with sched:
+        sched.warmup(kinds=(kind,))
+        t0 = time.time()
+        requests = []
+        for i in range(total):
+            r = sched.submit(payload_of(i), kind=kind,
+                             deadline_s=deadline_s)
+            if r is not None:
+                requests.append(r)
+        sched.drain()
+        wall = time.time() - t0
+
+    # top-tier fidelity probe: requests served at the *top* tier must
+    # agree (top-1) with the uncompiled per-layer plan walk — the same
+    # parity the fixed-band serve path is held to.
+    probe = [r for r in requests if r.tier == names[0]][: args.batch]
+    agree = None
+    if probe:
+        if kind == "bytes":
+            from repro.codec import ingest as ingestlib
+
+            coefs, _ = ingestlib.ingest_batch(
+                [r.payload for r in probe], quality=plan.spec.quality,
+                grid=(n_blocks, n_blocks), channels=cfg.in_channels,
+                with_stats=False)
+        else:
+            coefs = np.stack([np.asarray(r.payload) for r in probe])
+        ref = np.asarray(planlib.apply_plan(plan, jnp.asarray(coefs)))
+        served = np.stack([np.asarray(r.result()) for r in probe])
+        agree = float(np.mean(ref.argmax(-1) == served.argmax(-1)))
+
+    qos_report = metrics.report()
+    qos_report["tiers"] = [
+        {"name": t.name, "cap": t.cap,
+         "bands": sorted(set(t.bands.values()))} for t in ladder.tiers]
+    qos_report["top1_agree_top_tier"] = agree
+    served_n = len(requests)
+    out = {"arch": cfg.name, "images": served_n, "wall_s": wall,
+           "images_per_s": served_n / max(wall, 1e-9),
+           "completed": served_n, "rejected": total - served_n,
+           "dispatch": plan.cfg.path, "ingest": kind,
+           "latency_ms": qos_report["latency_ms"],
+           "qos": qos_report, "plan": plan_info}
+    _emit_report(args, out)
+    return out
+
+
+def _emit_report(args, out: dict) -> None:
+    print(json.dumps(out))
+    path = getattr(args, "report_out", None)
+    if path:
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+
+
 def serve_jpeg_resnet(args) -> dict:
     from repro.core import plan as planlib
     from repro.data import jpeg_iterator
@@ -273,6 +430,11 @@ def serve_jpeg_resnet(args) -> dict:
     dcfg = dispatchlib.configure(**changes)
     cfg = reduced_config("jpeg-resnet") if args.reduced else get_config("jpeg-resnet")
     plan, compiled, plan_info = prepare_plan(args, cfg, dcfg)
+
+    if getattr(args, "qos", False):
+        # thin-CLI handoff: the band-elastic runtime owns batching, tier
+        # selection, deadlines, and metrics from here on
+        return _serve_jpeg_qos(args, cfg, plan, plan_info)
 
     if compiled is not None:
         meta = compiled.meta or {}
@@ -331,6 +493,8 @@ def serve_jpeg_resnet(args) -> dict:
     # slot-based continuous batching (same structure as serve_lm): each
     # request classifies a random number of images; finished slots refill
     # from the pending queue so the batch stays full until the tail.
+    from repro.serving import metrics as servemetrics
+
     rng = np.random.default_rng(args.seed)
     b = args.batch
     max_imgs = max(args.max_new, 1)
@@ -345,16 +509,23 @@ def serve_jpeg_resnet(args) -> dict:
     completed = 0
     step = 1  # step 0 fed the warmup
     t0 = time.time()
+    # per-request latency: a slot's request starts when the slot is
+    # (re)filled and completes when its image budget is met
+    slot_start = np.full((b,), t0)
+    latencies: list[float] = []
     while completed < args.requests and active.any():
         logits = fwd(next_batch(step))
         step += 1
         logits.block_until_ready()  # labels would ship to clients here
+        now = time.time()
         n_imgs += int(active.sum())
         produced += active
         done = active & (produced >= budgets)
         for i in np.where(done)[0]:
             completed += 1
             produced[i] = 0
+            latencies.append(now - slot_start[i])
+            slot_start[i] = now
             if pending > 0:
                 pending -= 1
                 budgets[i] = rng.integers(1, max_imgs + 1)
@@ -364,7 +535,9 @@ def serve_jpeg_resnet(args) -> dict:
     out = {"arch": cfg.name, "images": n_imgs, "wall_s": wall,
            "images_per_s": n_imgs / max(wall, 1e-9),
            "completed": completed, "dispatch": plan.cfg.path,
-           "ingest": ingest_mode, "plan": plan_info}
+           "ingest": ingest_mode,
+           "latency_ms": servemetrics.percentiles(latencies),
+           "plan": plan_info}
     if ingest_mode == "bytes" and collected:
         from repro.codec import merge_stats
 
@@ -375,7 +548,7 @@ def serve_jpeg_resnet(args) -> dict:
             "mb_per_s": ingest_stats.bytes_in / max(wall, 1e-9) / 2**20,
             "mean_nonzero_per_block": round(ingest_stats.mean_nonzero, 2),
         }
-    print(json.dumps(out))
+    _emit_report(args, out)
     return out
 
 
@@ -414,6 +587,24 @@ def main() -> None:
                     help="when building the plan, pick per-layer bands "
                          "from the quantization table + a parity sweep "
                          "instead of the global knob")
+    ap.add_argument("--qos", action="store_true",
+                    help="serve jpeg-resnet through the band-elastic "
+                         "runtime (repro.serving): compiled-plan ladder "
+                         "+ async scheduler + queue-depth/deadline tier "
+                         "policy; --requests single-image requests are "
+                         "submitted as a saturating burst")
+    ap.add_argument("--tiers", default=None,
+                    help="ladder band caps for --qos, best first, e.g. "
+                         "'auto,48,32,24' (auto = the plan's own "
+                         "autotuned assignment; default that ladder)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for --qos; feeds the "
+                         "QoS tier policy and the deadline-miss metric")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission-control bound on queued requests "
+                         "for --qos (default: accept the whole burst)")
+    ap.add_argument("--report-out", default=None,
+                    help="also write the serve report JSON to this path")
     ap.add_argument("--compiled", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="serve the compiled fused-block schedule "

@@ -1,0 +1,56 @@
+"""Band-elastic serving runtime (ROADMAP "serving runtime").
+
+The paper's §6 sparsity result makes ``bands`` a *runtime* quality/latency
+knob: one trained network, compiled at several band budgets, can walk the
+accuracy/compute frontier under load.  This package turns that into a
+serving subsystem on top of the convert-once engine (``core.plan``):
+
+* :mod:`repro.serving.ladder` — one ``InferencePlan`` compiled into a
+  **plan ladder** of band tiers whose operators are prefix-slices of the
+  same exploded Ξ buffers, with bit-exact save/restore;
+* :mod:`repro.serving.scheduler` — an async request scheduler with
+  admission control, per-request deadlines, and mixed
+  ``coefficients``/``bytes`` ingest queues feeding ``repro.codec``;
+* :mod:`repro.serving.qos` — the band-elastic policy: queue-depth and
+  deadline-slack signals pick the tier per batch, degrading bands under
+  overload and recovering (with hysteresis) as the queue drains;
+* :mod:`repro.serving.metrics` — per-request latency percentiles,
+  per-tier throughput, tier-switch events, ingest occupancy.
+
+``launch/serve.py`` is a thin CLI over this runtime (``--qos``,
+``--tiers``, ``--deadline-ms``); ``benchmarks/fig5_throughput.py``'s
+``serving`` mode measures fixed-band vs elastic under overload.
+"""
+from repro.serving.ladder import (
+    DEFAULT_CAPS,
+    PlanLadder,
+    PlanTier,
+    build_ladder,
+    cap_plan,
+    load_ladder,
+    save_ladder,
+)
+from repro.serving.metrics import ServeMetrics, percentiles
+from repro.serving.qos import QosPolicy, TierSelector
+from repro.serving.scheduler import (
+    BandElasticScheduler,
+    SchedulerClosed,
+    ServeRequest,
+)
+
+__all__ = [
+    "DEFAULT_CAPS",
+    "PlanLadder",
+    "PlanTier",
+    "build_ladder",
+    "cap_plan",
+    "save_ladder",
+    "load_ladder",
+    "ServeMetrics",
+    "percentiles",
+    "QosPolicy",
+    "TierSelector",
+    "BandElasticScheduler",
+    "SchedulerClosed",
+    "ServeRequest",
+]

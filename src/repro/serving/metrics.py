@@ -1,0 +1,156 @@
+"""Serving metrics: request latencies, per-tier throughput, QoS events.
+
+``ServeMetrics`` is the one sink every serving component writes into —
+the scheduler records per-request latency and per-batch tier/throughput,
+the QoS selector records tier-switch events, the ingest path records the
+codec's per-band occupancy stats — and :meth:`ServeMetrics.report` folds
+everything into the JSON-serializable block the serve report embeds.
+
+:func:`percentiles` is also used standalone by the non-QoS slot loop in
+``launch/serve.py`` so plain serving reports p50/p95/p99 per-request
+latency too, not just aggregate wall clock.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+__all__ = ["percentiles", "ServeMetrics"]
+
+
+def percentiles(latencies_s: Sequence[float],
+                pcts: Iterable[int] = (50, 95, 99)) -> dict[str, float]:
+    """Latency summary in milliseconds: ``{"p50_ms": ..., "p95_ms": ...,
+    "p99_ms": ..., "mean_ms": ..., "max_ms": ..., "n": ...}``.
+
+    Empty input yields ``{"n": 0}`` (serving nothing is not an error).
+    """
+    xs = np.asarray(list(latencies_s), np.float64)
+    if xs.size == 0:
+        return {"n": 0}
+    out: dict[str, float] = {
+        f"p{p}_ms": round(float(np.percentile(xs, p)) * 1e3, 3)
+        for p in pcts
+    }
+    out["mean_ms"] = round(float(xs.mean()) * 1e3, 3)
+    out["max_ms"] = round(float(xs.max()) * 1e3, 3)
+    out["n"] = int(xs.size)
+    return out
+
+
+class ServeMetrics:
+    """Thread-safe recorder for one serving run.
+
+    Every ``record_*`` hook may be called from the scheduler worker and
+    from submitting threads concurrently; :meth:`report` may be called at
+    any time (it snapshots under the lock).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._latencies: list[float] = []
+        self._per_tier_latencies: dict[str, list[float]] = {}
+        self._tiers: dict[str, dict[str, float]] = {}
+        self._switches: list[dict[str, Any]] = []
+        self._rejected = 0
+        self._deadline_misses = 0
+        self._requests = 0
+        self._ingest: list[Any] = []
+
+    # ------------------------------------------------------------- requests
+    def record_request(self, latency_s: float, *, tier: str | None = None,
+                       deadline_missed: bool = False) -> None:
+        with self._lock:
+            self._requests += 1
+            self._latencies.append(float(latency_s))
+            if tier is not None:
+                self._per_tier_latencies.setdefault(tier, []).append(
+                    float(latency_s))
+            if deadline_missed:
+                self._deadline_misses += 1
+
+    def record_rejected(self, n: int = 1) -> None:
+        """Admission control turned a request away (queue full)."""
+        with self._lock:
+            self._rejected += n
+
+    # -------------------------------------------------------------- batches
+    def record_batch(self, tier: str, images: int, wall_s: float,
+                     queue_depth: int | None = None) -> None:
+        with self._lock:
+            t = self._tiers.setdefault(
+                tier, {"batches": 0, "images": 0, "wall_s": 0.0,
+                       "max_queue_depth": 0})
+            t["batches"] += 1
+            t["images"] += int(images)
+            t["wall_s"] += float(wall_s)
+            if queue_depth is not None:
+                t["max_queue_depth"] = max(t["max_queue_depth"],
+                                           int(queue_depth))
+
+    def record_switch(self, batch_seq: int, from_tier: str, to_tier: str,
+                      reason: str) -> None:
+        with self._lock:
+            self._switches.append({"batch": int(batch_seq),
+                                   "from": from_tier, "to": to_tier,
+                                   "reason": reason})
+
+    def record_ingest(self, stats: Any) -> None:
+        """Accumulate a ``codec.ingest.IngestStats`` from one byte batch."""
+        if stats is not None:
+            with self._lock:
+                self._ingest.append(stats)
+
+    # --------------------------------------------------------------- report
+    @property
+    def tier_switches(self) -> list[dict[str, Any]]:
+        with self._lock:
+            return list(self._switches)
+
+    def latency_report(self) -> dict[str, float]:
+        with self._lock:
+            return percentiles(self._latencies)
+
+    def report(self) -> dict[str, Any]:
+        with self._lock:
+            per_tier = {}
+            for name, t in self._tiers.items():
+                wall = max(t["wall_s"], 1e-9)
+                per_tier[name] = {
+                    **{k: (round(v, 6) if isinstance(v, float) else v)
+                       for k, v in t.items()},
+                    "images_per_s": round(t["images"] / wall, 2),
+                    "latency_ms": percentiles(
+                        self._per_tier_latencies.get(name, ())),
+                }
+            out: dict[str, Any] = {
+                "requests": self._requests,
+                "rejected": self._rejected,
+                "deadline_misses": self._deadline_misses,
+                "deadline_miss_rate": round(
+                    self._deadline_misses / max(self._requests, 1), 4),
+                "latency_ms": percentiles(self._latencies),
+                "per_tier": per_tier,
+                "tier_switches": list(self._switches),
+            }
+            if self._ingest:
+                from repro.codec import merge_stats
+
+                stats = merge_stats(self._ingest)
+                occ = np.asarray(stats.occupancy, np.float64)
+                total = float(occ.sum())
+                out["ingest"] = {
+                    "images": stats.images,
+                    "bytes_in": stats.bytes_in,
+                    "mean_nonzero_per_block": round(stats.mean_nonzero, 2),
+                    # occupancy mass beyond common band cutoffs: what each
+                    # ladder rung throws away, measured on the traffic
+                    "occupancy_dropped": {
+                        str(b): round(float(occ[b:].sum())
+                                      / max(total, 1e-12), 4)
+                        for b in (24, 32, 48)
+                    },
+                }
+            return out

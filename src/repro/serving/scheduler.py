@@ -1,0 +1,396 @@
+"""Async band-elastic request scheduler over a compiled-plan ladder.
+
+Generalizes the slot loop ``launch/serve.py`` used to hard-code into a
+runtime object:
+
+* **admission control** — at most ``max_pending`` queued requests; over
+  that, :meth:`BandElasticScheduler.submit` rejects (recorded in
+  metrics) instead of letting the queue grow without bound;
+* **two ingest queues** — ``coefficients`` requests carry pre-decoded
+  ``(bh, bw, C, 64)`` tensors; ``bytes`` requests carry real JPEG files
+  that the batch former hands to ``repro.codec`` (entropy decode +
+  per-image quantization normalization, packed straight into the serving
+  tier's tile-packed stem width).  Batches are kind-homogeneous; the
+  queue whose head request is oldest goes first (FIFO across kinds);
+* **per-request deadlines** — a request may carry a deadline; the QoS
+  selector sees the head-of-queue slack, and completions past their
+  deadline are recorded as misses;
+* **band-elastic execution** — before each batch the
+  :class:`repro.serving.qos.TierSelector` picks the ladder tier from
+  queue depth + deadline slack; the batch runs through that tier's
+  compiled schedule.  Batches are padded to the fixed slot count so each
+  tier compiles exactly once per ingest kind (no retrace per tail size).
+
+Lifecycle mirrors the ``data.pipeline.prefetch`` contract: the worker
+thread is owned by the scheduler — :meth:`close` (or leaving the
+``with`` block) joins it, draining queued requests by default; a crash in
+the worker fails every pending and future request with the original
+exception instead of hanging waiters, and :meth:`close` re-raises it.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import threading
+import time
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as planlib
+from repro.serving.ladder import PlanLadder
+from repro.serving.metrics import ServeMetrics
+from repro.serving.qos import QosPolicy, TierSelector
+
+__all__ = ["SchedulerClosed", "ServeRequest", "BandElasticScheduler"]
+
+KINDS = ("coefficients", "bytes")
+
+
+class SchedulerClosed(RuntimeError):
+    """The scheduler was closed (or died) before the request completed."""
+
+
+class ServeRequest:
+    """One in-flight classification request (a single image).
+
+    ``result()`` blocks until the scheduler completes the request and
+    returns the logits row; it raises the scheduler's failure if the
+    worker died (or :class:`SchedulerClosed` on a non-draining close).
+    """
+
+    __slots__ = ("rid", "kind", "payload", "deadline", "submitted",
+                 "tier", "latency_s", "_event", "_result", "_error")
+
+    def __init__(self, rid: int, kind: str, payload: Any,
+                 deadline: float | None):
+        self.rid = rid
+        self.kind = kind
+        self.payload = payload
+        self.deadline = deadline          # absolute monotonic seconds
+        self.submitted = time.monotonic()
+        self.tier: str | None = None      # tier name that served it
+        self.latency_s: float | None = None
+        self._event = threading.Event()
+        self._result: np.ndarray | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still pending")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _complete(self, logits: np.ndarray, tier: str) -> None:
+        self.tier = tier
+        self.latency_s = time.monotonic() - self.submitted
+        self._result = logits
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+
+class _TierExec:
+    """Jitted executors for one distinct compiled schedule.
+
+    ``executor`` selects the compiled-plan lowering (see
+    ``core.plan.apply_compiled``): the band-elastic runtime defaults to
+    the transform-domain tile-packed GEMM executor off-TPU — the only
+    off-TPU lowering whose latency the band budget actually moves (the
+    spatial lowering's conv cost is band-independent, which would make
+    every tier equally expensive and the ladder pointless).  On TPU the
+    compile-time path resolution (the Mosaic megakernel over the same
+    packed operands) is already band-elastic and is kept.
+    """
+
+    def __init__(self, compiled: planlib.CompiledPlan,
+                 executor: str | None = None):
+        self.compiled = compiled
+        self.executor = executor
+        self.coef_fn = jax.jit(
+            lambda c: planlib.apply_compiled(compiled, c,
+                                             executor=executor))
+        self.packed_fn = jax.jit(
+            lambda c: planlib.apply_compiled_packed(compiled, c,
+                                                    executor=executor))
+        self.w_in = compiled.stem.w_in
+
+
+class BandElasticScheduler:
+    """Continuous-batching scheduler with a band-elastic tier policy.
+
+    ``grid``/``channels`` describe the serving resolution (block grid of
+    the coefficient layout); they are required for ``bytes`` ingest and
+    for :meth:`warmup`.  ``policy=None`` with ``len(ladder) > 1`` uses
+    the default :class:`QosPolicy`; a single-tier ladder pins tier 0
+    (the fixed-band configuration the benchmarks compare against).
+    """
+
+    def __init__(self, ladder: PlanLadder, *, batch: int = 8,
+                 policy: QosPolicy | None = None,
+                 metrics: ServeMetrics | None = None,
+                 max_pending: int = 64,
+                 grid: tuple[int, int] | None = None,
+                 channels: int = 3,
+                 executor: str | None = "auto"):
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        if executor == "auto":
+            # off-TPU, only the packed-GEMM lowering is band-elastic; on
+            # TPU the per-block megakernel path already is
+            executor = None if jax.default_backend() == "tpu" else "gemm"
+        self.executor = executor
+        self.ladder = ladder
+        self.batch = batch
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.max_pending = max_pending
+        self.grid = grid
+        self.channels = channels
+        self.quality = ladder.base.spec.quality
+
+        # one executor per *distinct* compiled schedule; shared tiers
+        # reuse the jitted functions (and therefore the compile cache)
+        execs: dict[int, _TierExec] = {}
+        self._execs: list[_TierExec] = []
+        for tier in ladder.tiers:
+            key = id(tier.compiled)
+            if key not in execs:
+                execs[key] = _TierExec(tier.compiled, executor)
+            self._execs.append(execs[key])
+        self.tier_names = [t.name for t in ladder.tiers]
+
+        self.selector = TierSelector(
+            len(ladder.tiers), policy, tier_names=self.tier_names,
+            on_switch=self.metrics.record_switch)
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        self._queues = {k: collections.deque() for k in KINDS}
+        self._rid = itertools.count()
+        self._in_flight = 0
+        self._stop = False
+        self._drain = True
+        self._error: BaseException | None = None
+        self._batches = 0
+        self._images = 0
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    # ----------------------------------------------------------- submission
+    def submit(self, payload: Any, *, kind: str = "coefficients",
+               deadline_s: float | None = None) -> ServeRequest | None:
+        """Enqueue one request; returns None when admission control
+        rejects it (queue at ``max_pending``) and re-raises the worker's
+        failure when the scheduler has died."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown request kind {kind!r} "
+                             f"(expected one of {KINDS})")
+        if kind == "bytes" and self.grid is None:
+            raise ValueError("bytes ingest needs grid= at construction")
+        with self._lock:
+            if self._error is not None:
+                raise self._error
+            if self._stop:
+                raise SchedulerClosed("scheduler is closed")
+            if self._pending_locked() >= self.max_pending:
+                self.metrics.record_rejected()
+                return None
+            req = ServeRequest(next(self._rid), kind, payload,
+                               None if deadline_s is None
+                               else time.monotonic() + deadline_s)
+            self._queues[kind].append(req)
+            self._work.notify()
+            return req
+
+    def _pending_locked(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending_locked()
+
+    @property
+    def images_served(self) -> int:
+        with self._lock:
+            return self._images
+
+    # ------------------------------------------------------------ lifecycle
+    def warmup(self, kinds=KINDS) -> None:
+        """Compile every distinct tier executor at the fixed batch shape
+        so tier switches never pay an inline trace.  ``kinds`` limits the
+        compiles to the ingest kinds the caller will actually submit — a
+        coefficients-only serve has no reason to pay the packed-stem
+        compiles (and vice versa)."""
+        if self.grid is None:
+            raise ValueError("warmup needs grid= at construction")
+        bh, bw = self.grid
+        coef = jnp.zeros((self.batch, bh, bw, self.channels, 64),
+                         jnp.float32)
+        done = set()
+        for ex in self._execs:
+            if id(ex) in done:
+                continue
+            done.add(id(ex))
+            if "coefficients" in kinds:
+                ex.coef_fn(coef).block_until_ready()
+            if "bytes" in kinds:
+                packed = jnp.zeros((self.batch, bh, bw,
+                                    self.channels * ex.w_in), jnp.float32)
+                ex.packed_fn(packed).block_until_ready()
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request has completed (or the
+        scheduler died — the error re-raises here).  Returns False on
+        timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while self._pending_locked() or self._in_flight:
+                if self._error is not None:
+                    raise self._error
+                left = (None if deadline is None
+                        else deadline - time.monotonic())
+                if left is not None and left <= 0:
+                    return False
+                self._idle.wait(timeout=0.05 if left is None
+                                else min(left, 0.05))
+            if self._error is not None:
+                raise self._error
+        return True
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the worker and join it.
+
+        ``drain=True`` (default) serves everything already queued first;
+        ``drain=False`` fails queued requests with
+        :class:`SchedulerClosed`.  A worker failure re-raises here (once)
+        so errors cannot vanish with the thread.
+        """
+        with self._lock:
+            self._stop = True
+            self._drain = drain
+            self._work.notify_all()
+        self._worker.join()
+        if self._error is not None and not isinstance(self._error,
+                                                      SchedulerClosed):
+            err, self._error = self._error, SchedulerClosed(
+                "scheduler died; error already re-raised")
+            raise err
+
+    def __enter__(self) -> "BandElasticScheduler":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # consumer exception → don't sit around serving a dead consumer
+        self.close(drain=exc_type is None)
+
+    # --------------------------------------------------------------- worker
+    def _take_batch_locked(self) -> list[ServeRequest]:
+        heads = [(q[0].rid, kind) for kind, q in self._queues.items() if q]
+        if not heads:
+            return []
+        _, kind = min(heads)  # oldest head request wins (FIFO across kinds)
+        q = self._queues[kind]
+        out = [q.popleft() for _ in range(min(self.batch, len(q)))]
+        return out
+
+    def _head_slack_locked(self, now: float) -> float | None:
+        slacks = [q[0].deadline - now for q in self._queues.values()
+                  if q and q[0].deadline is not None]
+        return min(slacks) if slacks else None
+
+    def _run(self) -> None:
+        try:
+            while True:
+                with self._lock:
+                    while not self._pending_locked() and not self._stop:
+                        self._work.wait(timeout=0.05)
+                    if self._stop and (not self._drain
+                                       or not self._pending_locked()):
+                        break
+                    now = time.monotonic()
+                    slack = self._head_slack_locked(now)
+                    depth = self._pending_locked()
+                    tier_ix = self.selector.select(
+                        pending=depth, batch=self.batch, head_slack_s=slack)
+                    reqs = self._take_batch_locked()
+                    self._in_flight = len(reqs)
+                if not reqs:
+                    continue
+                try:
+                    self._execute(reqs, tier_ix, depth)
+                except BaseException as e:
+                    for r in reqs:  # the in-flight batch left the queue —
+                        r._fail(e)  # _fail_all below can't see it
+                    raise
+        except BaseException as e:  # noqa: BLE001 — re-raised at waiters
+            self._fail_all(e)
+            return
+        self._fail_all(SchedulerClosed("scheduler closed before completion"),
+                       record=False)
+
+    def _execute(self, reqs: list[ServeRequest], tier_ix: int,
+                 depth: int) -> None:
+        ex = self._execs[tier_ix]
+        name = self.tier_names[tier_ix]
+        n = len(reqs)
+        t0 = time.monotonic()
+        if reqs[0].kind == "bytes":
+            from repro.codec import ingest as ingestlib
+
+            packed, stats = ingestlib.ingest_batch(
+                [r.payload for r in reqs], quality=self.quality,
+                grid=self.grid, channels=self.channels,
+                pack_width=ex.w_in)
+            self.metrics.record_ingest(stats)
+            batch = self._pad(np.asarray(packed, np.float32))
+            logits = np.asarray(ex.packed_fn(jnp.asarray(batch)))
+        else:
+            batch = self._pad(np.stack(
+                [np.asarray(r.payload, np.float32) for r in reqs]))
+            logits = np.asarray(ex.coef_fn(jnp.asarray(batch)))
+        wall = time.monotonic() - t0
+        self.selector.observe(tier_ix, wall)
+        self.metrics.record_batch(name, n, wall, queue_depth=depth)
+        now = time.monotonic()
+        for i, r in enumerate(reqs):
+            r._complete(logits[i], name)
+            self.metrics.record_request(
+                r.latency_s, tier=name,
+                deadline_missed=(r.deadline is not None
+                                 and now > r.deadline))
+        with self._idle:
+            self._in_flight = 0
+            self._batches += 1
+            self._images += n
+            self._idle.notify_all()
+
+    def _pad(self, arr: np.ndarray) -> np.ndarray:
+        """Zero-pad the batch axis to the fixed slot count (one compiled
+        shape per tier per ingest kind)."""
+        if arr.shape[0] == self.batch:
+            return arr
+        pad = np.zeros((self.batch - arr.shape[0], *arr.shape[1:]),
+                       arr.dtype)
+        return np.concatenate([arr, pad])
+
+    def _fail_all(self, err: BaseException, record: bool = True) -> None:
+        with self._idle:
+            if record and self._error is None:
+                self._error = err
+            pending = [r for q in self._queues.values() for r in q]
+            for q in self._queues.values():
+                q.clear()
+            self._in_flight = 0
+            self._idle.notify_all()
+        for r in pending:
+            r._fail(err)

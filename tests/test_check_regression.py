@@ -1,0 +1,67 @@
+"""Perf-guard behavior (``benchmarks.check_regression``): fresh-only rows
+are informational, baseline-only rows skip, shared rows guard, and an
+empty *baseline* cannot crash a first run."""
+import json
+import sys
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps({"rows": rows}))
+    return str(p)
+
+
+def _row(name, speedup):
+    return {"name": name, "speedup": speedup, "derived": f"{speedup}x"}
+
+
+def _run(monkeypatch, base, fresh):
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression", base, fresh])
+    cr.main()
+
+
+def test_new_fresh_row_is_informational(tmp_path, monkeypatch, capsys):
+    base = _write(tmp_path, "base.json",
+                  [_row("fig5/infer_speedup_plan", 2.0)])
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("fig5/infer_speedup_plan", 2.0),
+                    _row("fig5/infer_speedup_serving", 1.9)])
+    _run(monkeypatch, base, fresh)  # must not raise SystemExit
+    out = capsys.readouterr().out
+    assert "INFO new row fig5/infer_speedup_serving" in out
+    assert "perf guard passed" in out
+
+
+def test_regression_still_fails(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json",
+                  [_row("fig5/infer_speedup_plan", 2.0)])
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("fig5/infer_speedup_plan", 1.0)])
+    with pytest.raises(SystemExit):
+        _run(monkeypatch, base, fresh)
+
+
+def test_baseline_rows_all_missing_from_fresh_fails(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json",
+                  [_row("fig5/infer_speedup_plan", 2.0)])
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("fig5/infer_speedup_new", 3.0)])
+    with pytest.raises(SystemExit):
+        _run(monkeypatch, base, fresh)
+
+
+def test_empty_baseline_fails(tmp_path, monkeypatch, capsys):
+    """A baseline with zero guarded rows (corrupt file, wrong prefix)
+    must fail — an empty comparison cannot wave regressions through."""
+    base = _write(tmp_path, "base.json", [])
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("fig5/infer_speedup_serving", 1.9)])
+    with pytest.raises(SystemExit):
+        _run(monkeypatch, base, fresh)
+    out = capsys.readouterr().out
+    assert "INFO new row" in out  # new rows still report before the FAIL

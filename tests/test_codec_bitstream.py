@@ -105,8 +105,45 @@ def test_progressive_rejected_loudly():
                          "L")
     buf = io.BytesIO()
     im.save(buf, "JPEG", quality=75, progressive=True)
-    with pytest.raises(bs.UnsupportedJpegError):
+    with pytest.raises(bs.UnsupportedJpegError) as e:
         bs.decode_jpeg(buf.getvalue())
+    msg = str(e.value)
+    assert "progressive" in msg
+    # the rejection is *friendly*: it names what IS supported and points
+    # at the roadmap item tracking the extension
+    assert "SOF0" in msg and "SOF1" in msg and "ROADMAP" in msg
+
+
+def _patch_sof_marker(data: bytes, to: int) -> bytes:
+    """Rewrite the fixture's SOF0 marker byte — the parser rejects at the
+    marker, before any entropy decoding, so the rest may stay stale."""
+    at = data.index(b"\xff\xc0")
+    return data[:at + 1] + bytes([to]) + data[at + 2:]
+
+
+@pytest.mark.parametrize("marker,expect", [
+    (0xC2, "progressive"),
+    (0xC3, "lossless"),
+    (0xC9, "arithmetic-coded sequential"),
+    (0xCA, "arithmetic-coded progressive"),
+])
+def test_unsupported_sof_variants_named(marker, expect):
+    data, _ = _load("gray_q80")
+    with pytest.raises(bs.UnsupportedJpegError) as e:
+        bs.decode_jpeg(_patch_sof_marker(data, marker))
+    msg = str(e.value)
+    assert expect in msg
+    assert "SOF0" in msg and "SOF1" in msg and "ROADMAP" in msg
+
+
+def test_arithmetic_dac_marker_rejected():
+    # a DAC (arithmetic conditioning) segment is only legal in arithmetic
+    # streams; reject it on sight with the same friendly pointer
+    stream = b"\xff\xd8" + b"\xff\xcc\x00\x04\x00\x01" + b"\xff\xd9"
+    with pytest.raises(bs.UnsupportedJpegError) as e:
+        bs.decode_jpeg(stream)
+    msg = str(e.value)
+    assert "arithmetic" in msg and "SOF0" in msg and "ROADMAP" in msg
 
 
 def test_huffman_lut_canonical_codes():
