@@ -4,9 +4,11 @@ regresses by more than the allowed fraction.
 
 Speedups are same-run *ratios* (e.g. compiled-over-plan on the same
 machine), so they are comparable across hosts in a way raw microseconds
-are not.  Rows are matched by name on a prefix (default
-``fig5/infer_speedup_``); rows present in only one file are reported but
-never compared (modes come and go across PRs).  In particular a row
+are not.  Rows are matched by name against ``--prefix``, a
+comma-separated list of name prefixes (default ``fig5/infer_speedup_``
+plus ``fig5/ingest_speedup_`` — the latter guards the bytes→logits
+serving-concurrency ratio); rows present in only one file are reported
+but never compared (modes come and go across PRs).  In particular a row
 present only in the *fresh* run — a brand-new benchmark mode, e.g. the
 first run of the ``serving`` overload sweep — is **informational**: it
 prints as ``INFO new row`` and cannot fail the guard until a baseline
@@ -38,12 +40,12 @@ def speedup_of(row: dict) -> float | None:
         return None
 
 
-def load_speedups(path: str, prefix: str) -> dict[str, float]:
+def load_speedups(path: str, prefixes: tuple[str, ...]) -> dict[str, float]:
     with open(path) as f:
         data = json.load(f)
     out = {}
     for row in data.get("rows", []):
-        if row.get("name", "").startswith(prefix):
+        if row.get("name", "").startswith(prefixes):
             val = speedup_of(row)
             if val is not None:
                 out[row["name"]] = val
@@ -57,11 +59,15 @@ def main() -> None:
     ap.add_argument("--max-regression", type=float, default=0.2,
                     help="allowed fractional drop below baseline (0.2 = "
                          "fail under 80%% of the committed speedup)")
-    ap.add_argument("--prefix", default="fig5/infer_speedup_")
+    ap.add_argument("--prefix",
+                    default="fig5/infer_speedup_,fig5/ingest_speedup_",
+                    help="comma-separated list of guarded row-name "
+                         "prefixes")
     args = ap.parse_args()
 
-    base = load_speedups(args.baseline, args.prefix)
-    fresh = load_speedups(args.fresh, args.prefix)
+    prefixes = tuple(p for p in args.prefix.split(",") if p)
+    base = load_speedups(args.baseline, prefixes)
+    fresh = load_speedups(args.fresh, prefixes)
     compared, failures = 0, []
     for name in sorted(set(base) | set(fresh)):
         if name not in base:

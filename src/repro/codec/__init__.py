@@ -11,19 +11,26 @@ pixels, no external codec libraries.
 """
 from repro.codec.bitstream import (  # noqa: F401
     DecodedJpeg, JpegError, UnsupportedJpegError, decode_jpeg,
+    decode_scan, prepare_scan,
 )
 from repro.codec.encode import (  # noqa: F401
     encode_baseline, encode_pixels, quantize_pixels,
 )
+from repro.codec.lockstep import (  # noqa: F401
+    LOCKSTEP_MIN_STREAMS, count_streams, decode_scans,
+)
 from repro.codec.normalize import normalize_image  # noqa: F401
 from repro.codec.ingest import (  # noqa: F401
-    IngestStats, decode_bytes, ingest_batch, merge_stats, pack_tiles,
+    IngestStats, decode_bytes, ingest_batch, ingest_pipeline,
+    ingest_workers, merge_stats, pack_tiles, shutdown_pool,
 )
 
 __all__ = [
     "DecodedJpeg", "JpegError", "UnsupportedJpegError", "decode_jpeg",
+    "decode_scan", "prepare_scan",
     "encode_baseline", "encode_pixels", "quantize_pixels",
+    "LOCKSTEP_MIN_STREAMS", "count_streams", "decode_scans",
     "normalize_image",
-    "IngestStats", "decode_bytes", "ingest_batch", "merge_stats",
-    "pack_tiles",
+    "IngestStats", "decode_bytes", "ingest_batch", "ingest_pipeline",
+    "ingest_workers", "merge_stats", "pack_tiles", "shutdown_pool",
 ]

@@ -34,6 +34,7 @@ array per component on that component's own (MCU-padded) sampling grid.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import numpy as np
@@ -46,8 +47,14 @@ __all__ = [
     "HuffmanTable",
     "FrameComponent",
     "DecodedJpeg",
+    "Scan",
+    "WalkArrays",
     "build_huffman_lut",
     "parse_segments",
+    "prepare_scan",
+    "decode_segment",
+    "assemble_blocks",
+    "decode_scan",
     "decode_jpeg",
 ]
 
@@ -165,6 +172,17 @@ def build_huffman_lut(counts: np.ndarray, symbols: np.ndarray) -> HuffmanTable:
     return HuffmanTable(counts, symbols, lut)
 
 
+@functools.lru_cache(maxsize=256)
+def _cached_table(counts: bytes, symbols: bytes) -> HuffmanTable:
+    """LUT build keyed on the DHT wire format.  Serving traffic reuses a
+    handful of tables (often just Annex K's four), so rebuilding the 2¹⁶
+    LUT per file would dominate parse time; the wire-format key also lets
+    worker processes rebuild tables from pickled ``(counts, symbols)``
+    bytes without ever shipping the LUTs themselves."""
+    return build_huffman_lut(np.frombuffer(counts, np.uint8),
+                             np.frombuffer(symbols, np.uint8))
+
+
 # --------------------------------------------------------------------------
 # Segment-level parsing
 # --------------------------------------------------------------------------
@@ -211,14 +229,16 @@ def parse_segments(data: bytes):
         pos += length
         ecs = b""
         if marker == SOS:
+            # vector scan for the first 0xFF not followed by a stuffed 0x00
+            # or an RST marker — the byte loop here dominated parse time
             start = pos
-            while pos + 1 < n:
-                if data[pos] == 0xFF and data[pos + 1] != 0x00 and not (
-                        RST0 <= data[pos + 1] <= RST7):
-                    break
-                pos += 1
-            else:
+            arr = np.frombuffer(data, np.uint8)
+            nxt = arr[start + 1: n]
+            stop = np.nonzero((arr[start: n - 1] == 0xFF) & (nxt != 0x00)
+                              & ~((RST0 <= nxt) & (nxt <= RST7)))[0]
+            if stop.size == 0:
                 raise JpegError("entropy-coded data ran past end of file")
+            pos = start + int(stop[0])
             ecs = data[start:pos]
         yield marker, payload, ecs
     raise JpegError("missing EOI marker")
@@ -260,7 +280,7 @@ def _parse_dht(payload: bytes, tables: dict[tuple[int, int], HuffmanTable]
         if symbols.shape[0] != total:
             raise JpegError("truncated DHT symbols")
         at += total
-        tables[(tc, th)] = build_huffman_lut(counts, symbols)
+        tables[(tc, th)] = _cached_table(counts.tobytes(), symbols.tobytes())
 
 
 def _parse_sof(marker: int, payload: bytes):
@@ -300,25 +320,31 @@ def _unstuff(ecs: np.ndarray) -> np.ndarray:
     return ecs[~drop]
 
 
-class _BitReader:
-    """Bit cursor over unstuffed bytes via precomputed 24-bit windows.
+def _windows(raw: np.ndarray) -> tuple[np.ndarray, int]:
+    """Unstuff ``raw`` and build the 24-bit peek windows.
 
-    ``w24[i] = bytes[i:i+3]`` big-endian, so the 16 bits starting at bit
-    position ``pos`` are ``(w24[pos >> 3] >> (8 - (pos & 7))) & 0xFFFF``
-    — O(1) per peek, 8 bytes of table per input byte (no per-bit
-    expansion, which would be 64–1024× the input size).
+    ``w24[i] = bytes[i:i+3]`` big-endian (padded with the spec's 1-bit
+    pad value), so the 16 bits starting at bit position ``pos`` are
+    ``(w24[pos >> 3] >> (8 - (pos & 7))) & 0xFFFF`` — O(1) per peek,
+    8 bytes of table per input byte.  Returns ``(w24, n_bits)``; shared
+    by the scalar :class:`_BitReader` and the lockstep decoder
+    (``codec.lockstep``), which concatenates many streams' windows.
     """
+    data = _unstuff(raw)
+    padded = np.concatenate([data,
+                             np.full(3, 0xFF, np.uint8)]).astype(np.int64)
+    w24 = (padded[:-2] << 16) | (padded[1:-1] << 8) | padded[2:]
+    return w24, data.shape[0] * 8
+
+
+class _BitReader:
+    """Bit cursor over unstuffed bytes via precomputed 24-bit windows
+    (see :func:`_windows`); reads past ``n`` are caught by the callers."""
 
     __slots__ = ("w24", "pos", "n")
 
     def __init__(self, raw: np.ndarray):
-        data = _unstuff(raw)
-        self.n = data.shape[0] * 8
-        # pad with 1-bits (the spec's pad value) so end-of-stream windows
-        # stay in range; reads past self.n are caught by the callers.
-        padded = np.concatenate([data,
-                                 np.full(3, 0xFF, np.uint8)]).astype(np.int64)
-        self.w24 = (padded[:-2] << 16) | (padded[1:-1] << 8) | padded[2:]
+        self.w24, self.n = _windows(raw)
         self.pos = 0
 
     def _peek16(self, pos: int) -> int:
@@ -393,13 +419,89 @@ def _decode_block(br: _BitReader, dc: HuffmanTable, ac: HuffmanTable,
     return diff
 
 
-def decode_jpeg(data: bytes) -> DecodedJpeg:
-    """Entropy-decode baseline JFIF bytes to quantized zigzag coefficients.
+class WalkArrays(NamedTuple):
+    """Vectorised MCU-walk: for every block of the scan, in entropy-decode
+    order, its component index, scan-component slot (→ Huffman table
+    pair), and target grid position.  ``per_mcu`` blocks per MCU."""
 
-    Bit-exact: the returned integers are the file's step-5 values with the
-    DC prediction undone — re-encoding them (``codec.encode``) reproduces
-    an equivalent bitstream, and ``codec.normalize`` turns them into the
-    network's real-valued convention.
+    ci: np.ndarray  # (n_blocks,) int16 component index
+    j: np.ndarray   # (n_blocks,) int16 scan-component slot
+    y: np.ndarray   # (n_blocks,) int32 block row on the component grid
+    x: np.ndarray   # (n_blocks,) int32 block col on the component grid
+    per_mcu: int
+
+
+class Scan(NamedTuple):
+    """A parsed + validated single-scan file, ready for entropy decode.
+
+    ``segments`` are the (still stuffed) entropy-coded byte runs between
+    restart markers; ``seg_mcus[i]`` is segment ``i``'s half-open MCU
+    range.  Every segment resets the DC predictors and bit alignment, so
+    each ``(segment, mcu_range)`` pair is independently decodable — the
+    unit of work for both the scalar reference loop and the parallel
+    decoders (``codec.lockstep``, the ingest worker pool).
+    """
+
+    width: int
+    height: int
+    comps: tuple[FrameComponent, ...]
+    qtables: dict[int, np.ndarray]
+    restart_interval: int
+    order: tuple[int, ...]
+    tables: tuple[tuple[HuffmanTable, HuffmanTable], ...]
+    interleaved: bool
+    grid: tuple[tuple[int, int], ...]  # per component (blocks_y, blocks_x)
+    mcux: int
+    n_mcus: int
+    segments: list[np.ndarray]
+    seg_mcus: tuple[tuple[int, int], ...]
+
+    @property
+    def walk(self) -> WalkArrays:
+        hv = tuple((c.h, c.v) for c in self.comps)
+        return _walk_arrays(self.interleaved, self.order, hv, self.grid,
+                            self.mcux, self.n_mcus)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_mcus * self.walk.per_mcu
+
+
+@functools.lru_cache(maxsize=256)
+def _walk_arrays(interleaved, order, hv, grid, mcux, n_mcus) -> WalkArrays:
+    if interleaved:
+        tpl = []
+        for jj, ci in enumerate(order):
+            h, v = hv[ci]
+            for vy in range(v):
+                for vx in range(h):
+                    tpl.append((ci, jj, vy, vx, v, h))
+        t = np.tile(np.asarray(tpl, np.int64), (n_mcus, 1))
+        per_mcu = len(tpl)
+        m = np.repeat(np.arange(n_mcus, dtype=np.int64), per_mcu)
+        ci, j = t[:, 0], t[:, 1]
+        y = (m // mcux) * t[:, 4] + t[:, 2]
+        x = (m % mcux) * t[:, 5] + t[:, 3]
+    else:
+        # single-component scan: the MCU is one block on the component's
+        # own grid
+        per_mcu = 1
+        _, bx = grid[order[0]]
+        ar = np.arange(n_mcus, dtype=np.int64)
+        ci = np.full(n_mcus, order[0], np.int64)
+        j = np.zeros(n_mcus, np.int64)
+        y, x = ar // bx, ar % bx
+    return WalkArrays(ci.astype(np.int16), j.astype(np.int16),
+                      y.astype(np.int32), x.astype(np.int32), per_mcu)
+
+
+def prepare_scan(data: bytes) -> Scan:
+    """Parse + validate baseline JFIF bytes up to (but excluding) the
+    entropy decode: markers, tables, scan geometry, restart segmentation.
+
+    All structural errors are raised here; what remains is the pure
+    per-segment bit consumption, so callers can fan the returned
+    ``(segment, mcu_range)`` pairs out to parallel decoders.
     """
     qtables: dict[int, np.ndarray] = {}
     huffman: dict[tuple[int, int], HuffmanTable] = {}
@@ -463,54 +565,93 @@ def decode_jpeg(data: bytes) -> DecodedJpeg:
         # non-interleaved: the MCU is one block on the component's own grid
         bx = -(-(-(-width * c.h // hmax)) // dctlib.BLOCK)
         by = -(-(-(-height * c.v // vmax)) // dctlib.BLOCK)
-        grid = {order[0]: (by, bx)}
+        grid = ((by, bx),)
         n_mcus = by * bx
     else:
-        grid = {i: (mcuy * c.v, mcux * c.h) for i, c in enumerate(comps)}
+        grid = tuple((mcuy * c.v, mcux * c.h) for c in comps)
         n_mcus = mcuy * mcux
-    coef = [np.zeros((*grid[i], dctlib.NFREQ), np.int32)
-            for i in range(len(comps))]
 
     segments = _split_restarts(ecs)
     expected = (-(-n_mcus // restart_interval)
                 if restart_interval else 1)
+    if (restart_interval and len(segments) == expected + 1
+            and segments[-1].size == 0):
+        # benign encoder shape: a restart marker emitted after the final
+        # MCU row, immediately before EOI — an empty trailing segment
+        # with no MCUs behind it.  Tolerate (drop) it; any non-empty
+        # surplus segment is still a genuine mismatch below.
+        segments = segments[:-1]
     if len(segments) != expected:
         raise JpegError(
             f"restart markers disagree with DRI: {len(segments)} segments "
             f"for {n_mcus} MCUs at interval {restart_interval}")
+    r = restart_interval or n_mcus
+    seg_mcus = tuple((i * r, min((i + 1) * r, n_mcus))
+                     for i in range(len(segments)))
 
-    block = np.zeros(dctlib.NFREQ, np.int32)
-    mcu = 0
-    for seg in segments:
-        br = _BitReader(seg)
-        preds = [0] * len(comps)
-        seg_end = (min(mcu + restart_interval, n_mcus)
-                   if restart_interval else n_mcus)
-        while mcu < seg_end:
-            if interleaved:
-                my, mx = divmod(mcu, mcux)
-                for j, ci in enumerate(order):
-                    c = comps[ci]
-                    dc_t, ac_t = tables[j]
-                    for vy in range(c.v):
-                        for vx in range(c.h):
-                            block[:] = 0
-                            preds[ci] += _decode_block(br, dc_t, ac_t, block)
-                            block[0] = preds[ci]
-                            coef[ci][my * c.v + vy, mx * c.h + vx] = block
-            else:
-                ci = order[0]
-                dc_t, ac_t = tables[0]
-                by_, bx_ = grid[ci]
-                yy, xx = divmod(mcu, bx_)
-                block[:] = 0
-                preds[ci] += _decode_block(br, dc_t, ac_t, block)
-                block[0] = preds[ci]
-                coef[ci][yy, xx] = block
-            mcu += 1
-    if mcu != n_mcus:
-        raise JpegError(f"decoded {mcu} MCUs, expected {n_mcus}")
+    return Scan(width, height, comps, qtables, restart_interval,
+                tuple(order), tuple(tables), interleaved, grid, mcux,
+                n_mcus, segments, seg_mcus)
 
-    return DecodedJpeg(width, height, comps,
-                       {k: v.copy() for k, v in qtables.items()},
-                       coef, restart_interval)
+
+def decode_segment(scan: Scan, seg: np.ndarray, mcu0: int, mcu1: int
+                   ) -> np.ndarray:
+    """Decode one restart segment's blocks — the pure unit of parallelism.
+
+    Returns ``(n_blocks, 64)`` int32 zigzag coefficients in MCU-walk
+    order with the segment-local DC prediction undone.  Depends only on
+    ``(scan tables/geometry, seg, mcu range)`` — never on neighbouring
+    segments — because a restart resets both predictors and bit
+    alignment.
+    """
+    walk = scan.walk
+    b0, b1 = mcu0 * walk.per_mcu, mcu1 * walk.per_mcu
+    br = _BitReader(seg)
+    out = np.zeros((b1 - b0, dctlib.NFREQ), np.int32)
+    preds = [0] * len(scan.comps)
+    j_seq = walk.j[b0:b1].tolist()
+    c_seq = walk.ci[b0:b1].tolist()
+    for t in range(b1 - b0):
+        dc_t, ac_t = scan.tables[j_seq[t]]
+        ci = c_seq[t]
+        preds[ci] += _decode_block(br, dc_t, ac_t, out[t])
+        out[t, 0] = preds[ci]
+    return out
+
+
+def assemble_blocks(scan: Scan, blocks: np.ndarray) -> DecodedJpeg:
+    """Scatter walk-ordered ``(n_blocks, 64)`` coefficients onto the
+    per-component MCU-padded grids."""
+    walk = scan.walk
+    coef = [np.zeros((*scan.grid[i], dctlib.NFREQ), np.int32)
+            for i in range(len(scan.comps))]
+    for i in range(len(scan.comps)):
+        m = walk.ci == i
+        coef[i][walk.y[m], walk.x[m]] = blocks[m]
+    return DecodedJpeg(scan.width, scan.height, scan.comps,
+                       {k: v.copy() for k, v in scan.qtables.items()},
+                       coef, scan.restart_interval)
+
+
+def decode_scan(scan: Scan) -> DecodedJpeg:
+    """Sequential reference decode: every segment through
+    :func:`decode_segment`, in file order.  The parallel decoders are
+    defined by producing bit-identical output to this loop."""
+    parts = [decode_segment(scan, seg, m0, m1)
+             for seg, (m0, m1) in zip(scan.segments, scan.seg_mcus)]
+    blocks = parts[0] if len(parts) == 1 else np.concatenate(parts)
+    return assemble_blocks(scan, blocks)
+
+
+def decode_jpeg(data: bytes) -> DecodedJpeg:
+    """Entropy-decode baseline JFIF bytes to quantized zigzag coefficients.
+
+    Bit-exact: the returned integers are the file's step-5 values with the
+    DC prediction undone — re-encoding them (``codec.encode``) reproduces
+    an equivalent bitstream, and ``codec.normalize`` turns them into the
+    network's real-valued convention.  This is the sequential reference
+    path; batched traffic goes through ``codec.ingest``, which fans
+    restart segments across the lockstep decoder / worker pool and must
+    match this function exactly.
+    """
+    return decode_scan(prepare_scan(data))

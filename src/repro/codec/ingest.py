@@ -18,20 +18,28 @@ chosen bands against the occupancy so over-truncation is visible.
 """
 from __future__ import annotations
 
-from typing import Iterable, NamedTuple
+import atexit
+import multiprocessing
+import os
+from concurrent.futures import ProcessPoolExecutor
+from typing import Iterable, Iterator, NamedTuple
 
 import numpy as np
 
 from repro.core import dct as dctlib
 from repro.codec import bitstream as bslib
+from repro.codec import lockstep as lklib
 from repro.codec import normalize as nmlib
 
 __all__ = [
     "IngestStats",
     "decode_bytes",
     "ingest_batch",
+    "ingest_pipeline",
+    "ingest_workers",
     "pack_tiles",
     "merge_stats",
+    "shutdown_pool",
 ]
 
 
@@ -98,10 +106,106 @@ def pack_tiles(coef: np.ndarray, width: int) -> np.ndarray:
     return np.ascontiguousarray(out).reshape(*lead, c * width)
 
 
+# ---------------------------------------------------------------------------
+# parallel decode: lockstep vectorisation + optional shared worker pool
+# ---------------------------------------------------------------------------
+
+#: number of decode workers: ``JPEG_INGEST_WORKERS`` env if set, else the
+#: CPU count.  ``1`` means everything stays in-process (the lockstep
+#: vector decode still runs; set ``parallel=False`` for the scalar
+#: reference path).
+def ingest_workers() -> int:
+    env = os.environ.get("JPEG_INGEST_WORKERS")
+    if env is not None:
+        return max(1, int(env))
+    return os.cpu_count() or 1
+
+
+_POOL: ProcessPoolExecutor | None = None
+_POOL_SIZE = 0
+
+
+def _get_pool(workers: int) -> ProcessPoolExecutor:
+    """Shared spawn-context pool, rebuilt if the worker count changes.
+
+    Spawn (not fork) so workers never inherit device handles or thread
+    state; the codec is numpy-pure, so a worker's import cost is small
+    and paid once per process lifetime.
+    """
+    global _POOL, _POOL_SIZE
+    if _POOL is None or _POOL_SIZE != workers:
+        shutdown_pool()
+        _POOL = ProcessPoolExecutor(
+            max_workers=workers,
+            mp_context=multiprocessing.get_context("spawn"))
+        _POOL_SIZE = workers
+    return _POOL
+
+
+def shutdown_pool() -> None:
+    """Tear down the shared decode pool (tests / clean shutdown)."""
+    global _POOL, _POOL_SIZE
+    if _POOL is not None:
+        _POOL.shutdown(wait=True, cancel_futures=True)
+        _POOL = None
+        _POOL_SIZE = 0
+
+
+atexit.register(shutdown_pool)
+
+
+def _decode_shard(datas: list[bytes], quality: int,
+                  grid: tuple[int, int] | None,
+                  channels: int | None) -> list[np.ndarray]:
+    """One worker's share: lockstep-decode its images × segments jointly,
+    then normalize.  Module-level so spawn workers can import it; raises
+    propagate through the future to the caller."""
+    scans = [bslib.prepare_scan(d) for d in datas]
+    return [nmlib.normalize_image(dec, quality=quality, grid=grid,
+                                  channels=channels)
+            for dec in lklib.decode_scans(scans)]
+
+
+def _decode_planes(datas: list[bytes], *, quality: int,
+                   grid: tuple[int, int] | None, channels: int | None,
+                   parallel: bool | None) -> list[np.ndarray]:
+    """Decode a batch to normalized planes, order-preserving.
+
+    ``parallel=False``: strict sequential scalar reference.  ``True``:
+    force the lockstep path (and the pool when workers > 1).  ``None``
+    (default): lockstep when the batch carries enough independent restart
+    streams (``lockstep.LOCKSTEP_MIN_STREAMS``), scalar otherwise —
+    always bit-exact either way.
+    """
+    if parallel is False:
+        return [decode_bytes(d, quality=quality, grid=grid,
+                             channels=channels) for d in datas]
+    workers = ingest_workers()
+    if workers > 1 and len(datas) >= 2:
+        pool = _get_pool(workers)
+        shards = [datas[i::workers] for i in range(workers)]
+        futs = [(i, pool.submit(_decode_shard, shard, quality, grid,
+                                channels))
+                for i, shard in enumerate(shards) if shard]
+        planes: list[np.ndarray | None] = [None] * len(datas)
+        for i, fut in futs:
+            for j, plane in enumerate(fut.result()):
+                planes[i + j * workers] = plane
+        return planes  # type: ignore[return-value]
+    scans = [bslib.prepare_scan(d) for d in datas]
+    if parallel or lklib.count_streams(scans) >= lklib.LOCKSTEP_MIN_STREAMS:
+        decs = lklib.decode_scans(scans)
+    else:
+        decs = [bslib.decode_scan(s) for s in scans]
+    return [nmlib.normalize_image(dec, quality=quality, grid=grid,
+                                  channels=channels) for dec in decs]
+
+
 def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
                  grid: tuple[int, int] | None = None, channels: int = 3,
                  pack_width: int | None = None,
-                 with_stats: bool = True
+                 with_stats: bool = True,
+                 parallel: bool | None = None
                  ) -> tuple[np.ndarray, IngestStats | None]:
     """Decode + normalize a batch of JPEG byte strings.
 
@@ -112,14 +216,18 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
     traffic.  ``stats`` aggregates the per-band energy/occupancy of the
     decoded coefficients (pre-packing, so the profile always covers all
     64 indices).
+
+    ``parallel`` picks the decode path (see :func:`_decode_planes`); the
+    result — batch, stats, and raised errors — is identical on every
+    path, only wall clock differs.  Stats are computed here in the
+    parent, so sharded decode cannot perturb them.
     """
-    planes, n_bytes = [], 0
-    for data in datas:
-        planes.append(decode_bytes(data, quality=quality, grid=grid,
-                                   channels=channels))
-        n_bytes += len(data)
-    if not planes:
+    datas = list(datas)
+    if not datas:
         raise ValueError("empty ingest batch")
+    n_bytes = sum(len(d) for d in datas)
+    planes = _decode_planes(datas, quality=quality, grid=grid,
+                            channels=channels, parallel=parallel)
     shapes = {p.shape for p in planes}
     if len(shapes) > 1:
         raise ValueError(
@@ -138,3 +246,23 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
     if pack_width is not None:
         batch = pack_tiles(batch, pack_width)
     return batch, stats
+
+
+def ingest_pipeline(batches: Iterable[Iterable[bytes]], *, depth: int = 2,
+                    **kw) -> Iterator[tuple[np.ndarray, IngestStats | None]]:
+    """Double-buffered ingest: decode of batch ``N+1`` overlaps whatever
+    the consumer does with batch ``N`` (device compute, typically).
+
+    Yields ``ingest_batch(batch, **kw)`` tuples in order, decoded
+    ``depth`` batches ahead on a producer thread.  The lifecycle contract
+    is :func:`repro.data.pipeline.prefetch`'s: closing the generator (or
+    a consumer exception) joins the producer thread, and a decode error
+    re-raises at the consumer's ``next()``.
+    """
+    from repro.data import pipeline as pipe  # lazy: pipeline imports us
+
+    def produce() -> Iterator[tuple[np.ndarray, IngestStats | None]]:
+        for datas in batches:
+            yield ingest_batch(datas, **kw)
+
+    return pipe.prefetch(produce(), depth=depth)

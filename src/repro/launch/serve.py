@@ -465,19 +465,34 @@ def serve_jpeg_resnet(args) -> dict:
             fwd = jax.jit(
                 lambda c: planlib.apply_compiled_packed(compiled, c))
         collected = []
+        ingest_kw = dict(quality=spec.quality, grid=(n_blocks, n_blocks),
+                         channels=cfg.in_channels, pack_width=pack_w)
+        pipe = {"it": None}
+
+        def byte_stream():
+            step = 1  # step 0 feeds the warmup inline
+            while True:
+                yield requests(step)
+                step += 1
 
         def next_batch(step: int) -> jnp.ndarray:
-            batch, stats = ingestlib.ingest_batch(
-                requests(step), quality=spec.quality,
-                grid=(n_blocks, n_blocks), channels=cfg.in_channels,
-                pack_width=pack_w)
+            if step == 0:
+                batch, _ = ingestlib.ingest_batch(requests(0), **ingest_kw)
+                return jnp.asarray(batch)
+            if pipe["it"] is None:
+                # double-buffered: decode of batch N+1 overlaps the
+                # device walk of batch N on the prefetch producer thread
+                pipe["it"] = ingestlib.ingest_pipeline(
+                    byte_stream(), depth=2, **ingest_kw)
+            batch, stats = next(pipe["it"])
             collected.append(stats)
             return jnp.asarray(batch)
 
         layout = f"tile-packed w={pack_w}" if pack_w else "64-wide"
         source = (f"files from {jpeg_dir}" if jpeg_dir
                   else "synthetic mixed-quality stream")
-        print(f"[serve] bytes-in ingest: {layout} ({source})")
+        print(f"[serve] bytes-in ingest: {layout} ({source}), "
+              f"overlapped decode ({ingestlib.ingest_workers()} workers)")
     else:
         it = jpeg_iterator(args.seed, args.batch, cfg.image_size,
                            cfg.in_channels, cfg.num_classes)
@@ -513,24 +528,28 @@ def serve_jpeg_resnet(args) -> dict:
     # (re)filled and completes when its image budget is met
     slot_start = np.full((b,), t0)
     latencies: list[float] = []
-    while completed < args.requests and active.any():
-        logits = fwd(next_batch(step))
-        step += 1
-        logits.block_until_ready()  # labels would ship to clients here
-        now = time.time()
-        n_imgs += int(active.sum())
-        produced += active
-        done = active & (produced >= budgets)
-        for i in np.where(done)[0]:
-            completed += 1
-            produced[i] = 0
-            latencies.append(now - slot_start[i])
-            slot_start[i] = now
-            if pending > 0:
-                pending -= 1
-                budgets[i] = rng.integers(1, max_imgs + 1)
-            else:
-                active[i] = False
+    try:
+        while completed < args.requests and active.any():
+            logits = fwd(next_batch(step))
+            step += 1
+            logits.block_until_ready()  # labels would ship to clients here
+            now = time.time()
+            n_imgs += int(active.sum())
+            produced += active
+            done = active & (produced >= budgets)
+            for i in np.where(done)[0]:
+                completed += 1
+                produced[i] = 0
+                latencies.append(now - slot_start[i])
+                slot_start[i] = now
+                if pending > 0:
+                    pending -= 1
+                    budgets[i] = rng.integers(1, max_imgs + 1)
+                else:
+                    active[i] = False
+    finally:
+        if ingest_mode == "bytes" and pipe["it"] is not None:
+            pipe["it"].close()  # joins the decode producer thread
     wall = time.time() - t0
     out = {"arch": cfg.name, "images": n_imgs, "wall_s": wall,
            "images_per_s": n_imgs / max(wall, 1e-9),
@@ -547,6 +566,8 @@ def serve_jpeg_resnet(args) -> dict:
             "bytes_in": ingest_stats.bytes_in,
             "mb_per_s": ingest_stats.bytes_in / max(wall, 1e-9) / 2**20,
             "mean_nonzero_per_block": round(ingest_stats.mean_nonzero, 2),
+            "workers": ingestlib.ingest_workers(),
+            "overlap": "pipeline(depth=2)",
         }
     _emit_report(args, out)
     return out

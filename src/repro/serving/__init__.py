@@ -34,6 +34,7 @@ from repro.serving.metrics import ServeMetrics, percentiles
 from repro.serving.qos import QosPolicy, TierSelector
 from repro.serving.scheduler import (
     BandElasticScheduler,
+    DeadlineExceeded,
     SchedulerClosed,
     ServeRequest,
 )
@@ -51,6 +52,7 @@ __all__ = [
     "QosPolicy",
     "TierSelector",
     "BandElasticScheduler",
+    "DeadlineExceeded",
     "SchedulerClosed",
     "ServeRequest",
 ]

@@ -56,8 +56,11 @@ class ServeMetrics:
         self._switches: list[dict[str, Any]] = []
         self._rejected = 0
         self._deadline_misses = 0
+        self._deadline_shed = 0
         self._requests = 0
         self._ingest: list[Any] = []
+        self._ingest_wall_s = 0.0
+        self._device_wall_s = 0.0
 
     # ------------------------------------------------------------- requests
     def record_request(self, latency_s: float, *, tier: str | None = None,
@@ -76,9 +79,19 @@ class ServeMetrics:
         with self._lock:
             self._rejected += n
 
+    def record_deadline_shed(self, n: int = 1) -> None:
+        """Requests already expired at dequeue, failed without dispatch."""
+        with self._lock:
+            self._deadline_shed += n
+
     # -------------------------------------------------------------- batches
     def record_batch(self, tier: str, images: int, wall_s: float,
-                     queue_depth: int | None = None) -> None:
+                     queue_depth: int | None = None,
+                     ingest_s: float | None = None) -> None:
+        """One executed batch.  ``wall_s`` is *device* wall (what the QoS
+        selector is fed); ``ingest_s``, when given, is the host entropy
+        decode wall the ingest thread spent on this batch — kept separate
+        so bytes-heavy traffic cannot poison per-tier latency."""
         with self._lock:
             t = self._tiers.setdefault(
                 tier, {"batches": 0, "images": 0, "wall_s": 0.0,
@@ -86,6 +99,9 @@ class ServeMetrics:
             t["batches"] += 1
             t["images"] += int(images)
             t["wall_s"] += float(wall_s)
+            self._device_wall_s += float(wall_s)
+            if ingest_s is not None:
+                self._ingest_wall_s += float(ingest_s)
             if queue_depth is not None:
                 t["max_queue_depth"] = max(t["max_queue_depth"],
                                            int(queue_depth))
@@ -131,6 +147,9 @@ class ServeMetrics:
                 "deadline_misses": self._deadline_misses,
                 "deadline_miss_rate": round(
                     self._deadline_misses / max(self._requests, 1), 4),
+                "deadline_shed": self._deadline_shed,
+                "device_wall_s": round(self._device_wall_s, 6),
+                "ingest_wall_s": round(self._ingest_wall_s, 6),
                 "latency_ms": percentiles(self._latencies),
                 "per_tier": per_tier,
                 "tier_switches": list(self._switches),
@@ -144,6 +163,7 @@ class ServeMetrics:
                 out["ingest"] = {
                     "images": stats.images,
                     "bytes_in": stats.bytes_in,
+                    "wall_s": round(self._ingest_wall_s, 6),
                     "mean_nonzero_per_block": round(stats.mean_nonzero, 2),
                     # occupancy mass beyond common band cutoffs: what each
                     # ladder rung throws away, measured on the traffic

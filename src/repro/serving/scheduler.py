@@ -6,15 +6,21 @@ runtime object:
 * **admission control** — at most ``max_pending`` queued requests; over
   that, :meth:`BandElasticScheduler.submit` rejects (recorded in
   metrics) instead of letting the queue grow without bound;
-* **two ingest queues** — ``coefficients`` requests carry pre-decoded
-  ``(bh, bw, C, 64)`` tensors; ``bytes`` requests carry real JPEG files
-  that the batch former hands to ``repro.codec`` (entropy decode +
-  per-image quantization normalization, packed straight into the serving
-  tier's tile-packed stem width).  Batches are kind-homogeneous; the
-  queue whose head request is oldest goes first (FIFO across kinds);
+* **two ingest queues, decode off the worker** — ``coefficients``
+  requests carry pre-decoded ``(bh, bw, C, 64)`` tensors; ``bytes``
+  requests carry real JPEG files.  A dedicated ingest thread drains the
+  bytes queue through ``repro.codec`` (parallel restart-segment entropy
+  decode + per-image quantization normalization) into a bounded
+  decoded-coefficients queue, so host Huffman work overlaps device
+  compute and the worker never decodes inline; decoded-but-unserved
+  requests still count against ``max_pending`` (decode backpressure
+  reaches admission control).  Batches are kind-homogeneous; the queue
+  whose head request is oldest goes first (FIFO across kinds);
 * **per-request deadlines** — a request may carry a deadline; the QoS
-  selector sees the head-of-queue slack, and completions past their
-  deadline are recorded as misses;
+  selector sees the head-of-queue slack; requests already expired at
+  dequeue are shed (failed with :class:`DeadlineExceeded`, counted as
+  ``deadline_shed``) instead of burning a batch slot, and completions
+  past their deadline are recorded as misses;
 * **band-elastic execution** — before each batch the
   :class:`repro.serving.qos.TierSelector` picks the ladder tier from
   queue depth + deadline slack; the batch runs through that tier's
@@ -44,13 +50,19 @@ from repro.serving.ladder import PlanLadder
 from repro.serving.metrics import ServeMetrics
 from repro.serving.qos import QosPolicy, TierSelector
 
-__all__ = ["SchedulerClosed", "ServeRequest", "BandElasticScheduler"]
+__all__ = ["DeadlineExceeded", "SchedulerClosed", "ServeRequest",
+           "BandElasticScheduler"]
 
 KINDS = ("coefficients", "bytes")
 
 
 class SchedulerClosed(RuntimeError):
     """The scheduler was closed (or died) before the request completed."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before it was dispatched; it was
+    shed at dequeue instead of wasting a batch slot."""
 
 
 class ServeRequest:
@@ -175,6 +187,14 @@ class BandElasticScheduler:
         self._work = threading.Condition(self._lock)
         self._idle = threading.Condition(self._lock)
         self._queues = {k: collections.deque() for k in KINDS}
+        # bytes batches the ingest thread has already decoded, waiting for
+        # the worker: (reqs, (N, bh, bw, C, 64) float32, decode wall).
+        # Bounded: the ingest thread stalls past _decoded_cap batches so
+        # decode cannot run unboundedly ahead of the device.
+        self._decoded: collections.deque = collections.deque()
+        self._decoded_cap = 2
+        self._ingesting = 0          # bytes requests currently decoding
+        self._ingest_alive = True
         self._rid = itertools.count()
         self._in_flight = 0
         self._stop = False
@@ -182,8 +202,12 @@ class BandElasticScheduler:
         self._error: BaseException | None = None
         self._batches = 0
         self._images = 0
-        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="scheduler-worker")
+        self._ingest_thread = threading.Thread(
+            target=self._ingest_run, daemon=True, name="scheduler-ingest")
         self._worker.start()
+        self._ingest_thread.start()
 
     # ----------------------------------------------------------- submission
     def submit(self, payload: Any, *, kind: str = "coefficients",
@@ -208,11 +232,16 @@ class BandElasticScheduler:
                                None if deadline_s is None
                                else time.monotonic() + deadline_s)
             self._queues[kind].append(req)
-            self._work.notify()
+            self._work.notify_all()  # worker and ingest thread both wait
             return req
 
     def _pending_locked(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        # everything submitted but not yet dispatched: raw queues, bytes
+        # mid-decode, and decoded batches awaiting the worker — so
+        # admission control sees decode backpressure too
+        return (sum(len(q) for q in self._queues.values())
+                + self._ingesting
+                + sum(len(e[0]) for e in self._decoded))
 
     @property
     def pending(self) -> int:
@@ -279,6 +308,7 @@ class BandElasticScheduler:
             self._stop = True
             self._drain = drain
             self._work.notify_all()
+        self._ingest_thread.join()
         self._worker.join()
         if self._error is not None and not isinstance(self._error,
                                                       SchedulerClosed):
@@ -293,41 +323,157 @@ class BandElasticScheduler:
         # consumer exception → don't sit around serving a dead consumer
         self.close(drain=exc_type is None)
 
+    # -------------------------------------------------------- ingest thread
+    def _ingest_run(self) -> None:
+        """Drain the bytes queue into the decoded-coefficients queue.
+
+        Decodes full-width (64-lane) batches so tier selection stays with
+        the worker — packing to the chosen tier's stem width is a cheap
+        slice at execute time.  Runs the codec's parallel path; decode
+        wall is measured here and reported separately from device wall.
+        """
+        from repro.codec import ingest as ingestlib
+
+        reqs: list[ServeRequest] = []
+        try:
+            while True:
+                with self._lock:
+                    while True:
+                        if self._error is not None or (
+                                self._stop
+                                and (not self._drain
+                                     or not self._queues["bytes"])):
+                            return
+                        if (self._queues["bytes"] and
+                                len(self._decoded) < self._decoded_cap):
+                            break  # work available, decoded queue has room
+                        self._work.wait(timeout=0.05)
+                    now = time.monotonic()
+                    reqs, shed = [], []
+                    q = self._queues["bytes"]
+                    while q and len(reqs) < self.batch:
+                        r = q.popleft()
+                        if r.deadline is not None and now > r.deadline:
+                            shed.append(r)  # shed before paying the decode
+                        else:
+                            reqs.append(r)
+                    self._ingesting = len(reqs)
+                self._shed(shed)
+                if not reqs:
+                    with self._idle:
+                        self._idle.notify_all()
+                    continue
+                t0 = time.monotonic()
+                coef, stats = ingestlib.ingest_batch(
+                    [r.payload for r in reqs], quality=self.quality,
+                    grid=self.grid, channels=self.channels)
+                wall = time.monotonic() - t0
+                self.metrics.record_ingest(stats)
+                with self._lock:
+                    if self._stop and not self._drain:
+                        for r in reqs:
+                            r._fail(SchedulerClosed(
+                                "scheduler closed before completion"))
+                        self._ingesting = 0
+                        return
+                    self._decoded.append(
+                        (reqs, np.asarray(coef, np.float32), wall))
+                    self._ingesting = 0
+                    reqs = []
+                    self._work.notify_all()
+        except BaseException as e:  # noqa: BLE001 — re-raised at waiters
+            for r in reqs:
+                r._fail(e)
+            with self._lock:
+                self._ingesting = 0
+            self._fail_all(e)
+        finally:
+            with self._lock:
+                self._ingest_alive = False
+                self._work.notify_all()
+
+    def _shed(self, shed: list[ServeRequest]) -> None:
+        if not shed:
+            return
+        self.metrics.record_deadline_shed(len(shed))
+        for r in shed:
+            r._fail(DeadlineExceeded(
+                f"request {r.rid} expired before dispatch"))
+
     # --------------------------------------------------------------- worker
-    def _take_batch_locked(self) -> list[ServeRequest]:
-        heads = [(q[0].rid, kind) for kind, q in self._queues.items() if q]
+    def _ready_locked(self) -> bool:
+        return bool(self._decoded) or bool(self._queues["coefficients"])
+
+    def _take_batch_locked(self, now: float):
+        """Pop the next kind-homogeneous batch, shedding expired requests.
+
+        Returns ``(reqs, decoded, shed)``: ``decoded`` is the ingest
+        thread's ``(coef, ingest_wall)`` for a bytes batch, None for a
+        coefficients batch; ``shed`` are expired requests to fail.
+        """
+        heads = []
+        if self._decoded:
+            heads.append((self._decoded[0][0][0].rid, "bytes"))
+        if self._queues["coefficients"]:
+            heads.append((self._queues["coefficients"][0].rid,
+                          "coefficients"))
         if not heads:
-            return []
+            return [], None, []
         _, kind = min(heads)  # oldest head request wins (FIFO across kinds)
-        q = self._queues[kind]
-        out = [q.popleft() for _ in range(min(self.batch, len(q)))]
-        return out
+        if kind == "bytes":
+            reqs, coef, wall = self._decoded.popleft()
+            live = [i for i, r in enumerate(reqs)
+                    if r.deadline is None or now <= r.deadline]
+            shed = [r for i, r in enumerate(reqs) if i not in set(live)]
+            if len(live) != len(reqs):
+                reqs = [reqs[i] for i in live]
+                coef = coef[live]
+            return reqs, (coef, wall), shed
+        q = self._queues["coefficients"]
+        reqs, shed = [], []
+        while q and len(reqs) < self.batch:
+            r = q.popleft()
+            if r.deadline is not None and now > r.deadline:
+                shed.append(r)
+            else:
+                reqs.append(r)
+        return reqs, None, shed
 
     def _head_slack_locked(self, now: float) -> float | None:
         slacks = [q[0].deadline - now for q in self._queues.values()
                   if q and q[0].deadline is not None]
+        slacks += [r.deadline - now for e in self._decoded
+                   for r in e[0][:1] if r.deadline is not None]
         return min(slacks) if slacks else None
 
     def _run(self) -> None:
         try:
             while True:
                 with self._lock:
-                    while not self._pending_locked() and not self._stop:
+                    while (not self._ready_locked() and not self._stop
+                           and self._error is None):
                         self._work.wait(timeout=0.05)
+                    if self._error is not None:
+                        raise self._error
                     if self._stop and (not self._drain
-                                       or not self._pending_locked()):
+                                       or (not self._pending_locked()
+                                           and not self._ingesting)):
                         break
                     now = time.monotonic()
                     slack = self._head_slack_locked(now)
                     depth = self._pending_locked()
                     tier_ix = self.selector.select(
                         pending=depth, batch=self.batch, head_slack_s=slack)
-                    reqs = self._take_batch_locked()
+                    reqs, decoded, shed = self._take_batch_locked(now)
                     self._in_flight = len(reqs)
+                self._shed(shed)
                 if not reqs:
+                    with self._idle:
+                        self._in_flight = 0
+                        self._idle.notify_all()
                     continue
                 try:
-                    self._execute(reqs, tier_ix, depth)
+                    self._execute(reqs, tier_ix, depth, decoded)
                 except BaseException as e:
                     for r in reqs:  # the in-flight batch left the queue —
                         r._fail(e)  # _fail_all below can't see it
@@ -339,28 +485,30 @@ class BandElasticScheduler:
                        record=False)
 
     def _execute(self, reqs: list[ServeRequest], tier_ix: int,
-                 depth: int) -> None:
+                 depth: int, decoded=None) -> None:
         ex = self._execs[tier_ix]
         name = self.tier_names[tier_ix]
         n = len(reqs)
+        ingest_wall = None
         t0 = time.monotonic()
         if reqs[0].kind == "bytes":
             from repro.codec import ingest as ingestlib
 
-            packed, stats = ingestlib.ingest_batch(
-                [r.payload for r in reqs], quality=self.quality,
-                grid=self.grid, channels=self.channels,
-                pack_width=ex.w_in)
-            self.metrics.record_ingest(stats)
-            batch = self._pad(np.asarray(packed, np.float32))
+            # decode already happened on the ingest thread; only the
+            # pack-to-tier-width slice and the device walk run here
+            coef, ingest_wall = decoded
+            batch = self._pad(ingestlib.pack_tiles(coef, ex.w_in))
             logits = np.asarray(ex.packed_fn(jnp.asarray(batch)))
         else:
             batch = self._pad(np.stack(
                 [np.asarray(r.payload, np.float32) for r in reqs]))
             logits = np.asarray(ex.coef_fn(jnp.asarray(batch)))
         wall = time.monotonic() - t0
+        # only device wall reaches the QoS EMA: host decode cost is
+        # band-independent, so folding it in would poison tier selection
         self.selector.observe(tier_ix, wall)
-        self.metrics.record_batch(name, n, wall, queue_depth=depth)
+        self.metrics.record_batch(name, n, wall, queue_depth=depth,
+                                  ingest_s=ingest_wall)
         now = time.monotonic()
         for i, r in enumerate(reqs):
             r._complete(logits[i], name)
@@ -388,9 +536,12 @@ class BandElasticScheduler:
             if record and self._error is None:
                 self._error = err
             pending = [r for q in self._queues.values() for r in q]
+            pending += [r for e in self._decoded for r in e[0]]
             for q in self._queues.values():
                 q.clear()
+            self._decoded.clear()
             self._in_flight = 0
+            self._work.notify_all()
             self._idle.notify_all()
         for r in pending:
             r._fail(err)

@@ -4,7 +4,12 @@ Two tiny JPEGs are committed alongside their entropy-decoded coefficient
 ``.npz`` files:
 
 * ``gray_q80.jpg``     — 40×56 grayscale, quality 80, 4:4:4 (trivially);
-* ``color_q85_420.jpg`` — 48×48 3-component, quality 85, 4:2:0 chroma.
+* ``color_q85_420.jpg`` — 48×48 3-component, quality 85, 4:2:0 chroma;
+* ``color_q75_dri.jpg`` — 48×48 3-component, quality 75, 4:2:0, with DRI
+  restart markers every MCU row (the parallel-decode segmentation);
+* ``color_q75_dri_trailing_rst.jpg`` — the same stream with an extra
+  restart marker inserted immediately before EOI, a benign shape some
+  encoders emit (an empty trailing segment the decoder must tolerate).
 
 Both are encoded by **PIL/libjpeg** (an independent implementation) from
 deterministic closed-form images, so the bitstreams pin real-world JFIF
@@ -91,6 +96,27 @@ def main() -> None:
     buf = io.BytesIO()
     im.save(buf, "JPEG", quality=85, subsampling=2)
     save("color_q85_420", buf.getvalue())
+
+    print("color_q75_dri (48x48, quality 75, 4:2:0, DRI each MCU row):")
+    im = Image.fromarray(np.uint8(det_image(48, 48, 3)).transpose(1, 2, 0),
+                         "RGB")
+    buf = io.BytesIO()
+    im.save(buf, "JPEG", quality=75, subsampling=2, restart_marker_rows=1)
+    data = buf.getvalue()
+    save("color_q75_dri", data)
+
+    print("color_q75_dri_trailing_rst (extra RST before EOI):")
+    from repro.codec import bitstream as bs
+
+    n_seg = len(bs.prepare_scan(data).segments)
+    nxt = 0xD0 + (n_seg - 1) % 8  # next restart marker in the 8-cycle
+    assert data.endswith(b"\xff\xd9")
+    patched = data[:-2] + bytes([0xFF, nxt]) + b"\xff\xd9"
+    ref = bs.decode_jpeg(data)
+    got = bs.decode_jpeg(patched)
+    for a, b in zip(ref.coefficients, got.coefficients):
+        assert np.array_equal(a, b), "trailing RST changed coefficients"
+    save("color_q75_dri_trailing_rst", patched)
 
 
 if __name__ == "__main__":

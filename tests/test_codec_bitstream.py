@@ -27,7 +27,8 @@ except ModuleNotFoundError:
     HAVE_PIL = False
 
 FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "codec")
-FIXTURES = ("gray_q80", "color_q85_420")
+FIXTURES = ("gray_q80", "color_q85_420", "color_q75_dri",
+            "color_q75_dri_trailing_rst")
 
 
 def _load(name):
@@ -144,6 +145,35 @@ def test_arithmetic_dac_marker_rejected():
         bs.decode_jpeg(stream)
     msg = str(e.value)
     assert "arithmetic" in msg and "SOF0" in msg and "ROADMAP" in msg
+
+
+def test_trailing_restart_marker_tolerated_bit_exact():
+    """A restart marker emitted right before EOI (an empty trailing
+    segment) is a benign shape some encoders produce — the decode must
+    match the unpatched stream exactly."""
+    data, _ = _load("color_q75_dri")
+    patched, _ = _load("color_q75_dri_trailing_rst")
+    assert len(patched) == len(data) + 2  # exactly one extra marker
+    ref = bs.decode_jpeg(data)
+    got = bs.decode_jpeg(patched)
+    assert got.restart_interval == ref.restart_interval
+    for a, b in zip(ref.coefficients, got.coefficients):
+        assert np.array_equal(a, b)
+
+
+def test_genuine_restart_mismatch_still_loud():
+    data, _ = _load("color_q75_dri")
+    n_seg = len(bs.prepare_scan(data).segments)
+    nxt = bytes([0xFF, 0xD0 + (n_seg - 1) % 8])
+    body, eoi = data[:-2], data[-2:]
+    # a *non-empty* surplus segment is data the DRI accounting cannot
+    # place — not the benign empty-trailing shape
+    with pytest.raises(bs.JpegError, match="restart markers disagree"):
+        bs.decode_jpeg(body + nxt + b"\x12\x34" + eoi)
+    # two trailing restart markers are past any benign tolerance
+    nxt2 = bytes([0xFF, 0xD0 + n_seg % 8])
+    with pytest.raises(bs.JpegError, match="restart markers disagree"):
+        bs.decode_jpeg(body + nxt + nxt2 + eoi)
 
 
 def test_huffman_lut_canonical_codes():

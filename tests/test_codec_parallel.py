@@ -1,0 +1,226 @@
+"""Parallel-vs-sequential decode parity.
+
+The lockstep vector decoder (``codec.lockstep``), the sharded worker
+pool, and the overlapped ``ingest_pipeline`` are *performance* paths:
+every one of them must be bit-exact with the scalar reference decoder
+(``bitstream.decode_scan``) and produce identical ``IngestStats`` —
+across the committed fixtures, property round-trips with varied DRI
+intervals, the 1-segment no-DRI degenerate case, and error streams
+(pool exceptions must propagate, not poison the batch silently).
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.codec import bitstream as bs
+from repro.codec import encode as enc
+from repro.codec import ingest as ing
+from repro.codec import lockstep as lk
+
+FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "codec")
+FIXTURES = ("gray_q80", "color_q85_420", "color_q75_dri",
+            "color_q75_dri_trailing_rst")
+
+
+def _fixture_bytes(name):
+    with open(os.path.join(FIXDIR, name + ".jpg"), "rb") as f:
+        return f.read()
+
+
+def _smooth(shape, seed):
+    rng = np.random.default_rng(seed)
+    c, h, w = shape
+    y = np.linspace(-1, 1, h)[None, :, None]
+    x = np.linspace(-1, 1, w)[None, None, :]
+    img = 0.5 * np.sin(3 * y + 2 * x) + rng.normal(0, 0.2, shape)
+    return np.clip(img, -1.0, 127.0 / 128.0)
+
+
+def _assert_bit_exact(a: bs.DecodedJpeg, b: bs.DecodedJpeg):
+    assert len(a.coefficients) == len(b.coefficients)
+    for ca, cb in zip(a.coefficients, b.coefficients):
+        assert np.array_equal(ca, cb)
+
+
+def _assert_stats_equal(a: ing.IngestStats, b: ing.IngestStats):
+    assert a.images == b.images and a.blocks == b.blocks
+    assert a.bytes_in == b.bytes_in
+    assert np.array_equal(a.energy, b.energy)
+    assert np.array_equal(a.occupancy, b.occupancy)
+
+
+# ---------------------------------------------------------------------------
+# lockstep decoder vs scalar reference
+# ---------------------------------------------------------------------------
+
+
+def test_lockstep_bit_exact_on_fixtures():
+    scans = [bs.prepare_scan(_fixture_bytes(n)) for n in FIXTURES]
+    ref = [bs.decode_scan(s) for s in scans]
+    got = lk.decode_scans(scans)
+    for r, g in zip(ref, got):
+        _assert_bit_exact(r, g)
+
+
+def test_lockstep_single_stream_no_dri():
+    """A DRI-less file is one whole-file stream: below the lockstep
+    threshold the auto path stays scalar, but forcing lockstep on a
+    single stream must still be bit-exact."""
+    data = _fixture_bytes("gray_q80")
+    scan = bs.prepare_scan(data)
+    assert scan.restart_interval == 0
+    assert lk.count_streams([scan]) == 1
+    _assert_bit_exact(bs.decode_scan(scan), lk.decode_scans([scan])[0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 5), st.integers(0, 2), st.integers(0, 99))
+def test_lockstep_round_trip_varied_dri(dri, q, seed):
+    """encode → decode round-trip parity at property-varied restart
+    intervals (0 = no DRI), qualities, and gray/color layouts."""
+    quality = (60, 75, 90)[q]
+    if seed % 2:
+        img = _smooth((1, 24, 32), seed)
+    else:
+        img = _smooth((3, 32, 48), seed)
+    data = enc.encode_pixels(img, quality=quality, restart_interval=dri)
+    scan = bs.prepare_scan(data)
+    _assert_bit_exact(bs.decode_scan(scan), lk.decode_scans([scan])[0])
+
+
+def test_lockstep_bad_stream_falls_back_per_image():
+    """A corrupt stream in a batch reproduces the scalar decoder's
+    exception without poisoning the other images."""
+    good = _fixture_bytes("color_q75_dri")
+    scan = bs.prepare_scan(good)
+    # truncate the final segment's bits: lockstep flags the overrun and
+    # re-runs that image on the scalar path, which raises
+    broken = scan._replace(segments=tuple(
+        list(scan.segments[:-1]) + [scan.segments[-1][:2]]))
+    with pytest.raises(bs.JpegError):
+        bs.decode_scan(broken)
+    with pytest.raises(bs.JpegError):
+        lk.decode_scans([broken])
+    # the same broken scan next to healthy ones: decode_scans raises for
+    # the batch (matching sequential semantics) — but healthy-only
+    # batches that *flag* no error never take the fallback
+    out = lk.decode_scans([scan, bs.prepare_scan(good)])
+    _assert_bit_exact(bs.decode_scan(scan), out[0])
+
+
+# ---------------------------------------------------------------------------
+# ingest_batch parallel modes
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_parallel_matches_sequential_on_fixtures():
+    datas = [_fixture_bytes(n) for n in FIXTURES] * 2
+    kw = dict(quality=50, grid=(5, 5), channels=3)
+    seq, s_seq = ing.ingest_batch(datas, parallel=False, **kw)
+    par, s_par = ing.ingest_batch(datas, parallel=True, **kw)
+    auto, s_auto = ing.ingest_batch(datas, **kw)
+    assert np.array_equal(seq, par) and np.array_equal(seq, auto)
+    _assert_stats_equal(s_seq, s_par)
+    _assert_stats_equal(s_seq, s_auto)
+    # identical under merge_stats: per-half stats from the parallel path
+    # merge to the same result as the sequential halves, bit-for-bit
+    # (and agree with the whole-batch pass up to summation order)
+    halves_par = [ing.ingest_batch(d, parallel=True, **kw)[1]
+                  for d in (datas[:4], datas[4:])]
+    halves_seq = [ing.ingest_batch(d, parallel=False, **kw)[1]
+                  for d in (datas[:4], datas[4:])]
+    m_par, m_seq = ing.merge_stats(halves_par), ing.merge_stats(halves_seq)
+    _assert_stats_equal(m_par, m_seq)
+    assert m_par.images == s_seq.images and m_par.blocks == s_seq.blocks
+    assert np.allclose(m_par.energy, s_seq.energy)
+    assert np.allclose(m_par.occupancy, s_seq.occupancy)
+
+
+def test_ingest_pool_matches_sequential(monkeypatch):
+    """Sharded pool decode (2 spawn workers) is bit-exact and
+    order-preserving vs the in-process sequential reference."""
+    datas = [_fixture_bytes(FIXTURES[i % len(FIXTURES)]) for i in range(6)]
+    kw = dict(quality=50, grid=(5, 5), channels=3)
+    seq, s_seq = ing.ingest_batch(datas, parallel=False, **kw)
+    monkeypatch.setenv("JPEG_INGEST_WORKERS", "2")
+    try:
+        pool, s_pool = ing.ingest_batch(datas, **kw)
+    finally:
+        ing.shutdown_pool()
+    assert np.array_equal(seq, pool)
+    _assert_stats_equal(s_seq, s_pool)
+
+
+def test_ingest_pool_exception_propagates(monkeypatch):
+    """A worker raising mid-shard surfaces the original JpegError at the
+    caller (through the future), not a pool plumbing error."""
+    datas = [_fixture_bytes("gray_q80"), b"\x00not a jpeg",
+             _fixture_bytes("color_q85_420"), _fixture_bytes("gray_q80")]
+    monkeypatch.setenv("JPEG_INGEST_WORKERS", "2")
+    try:
+        with pytest.raises(bs.JpegError):
+            ing.ingest_batch(datas, quality=50, grid=(5, 5), channels=3)
+    finally:
+        ing.shutdown_pool()
+
+
+def test_ingest_workers_env_pins_sequential(monkeypatch):
+    """JPEG_INGEST_WORKERS=1 keeps everything in-process: no pool is
+    ever constructed (the CI sequential-fallback job relies on this)."""
+    monkeypatch.setenv("JPEG_INGEST_WORKERS", "1")
+    assert ing.ingest_workers() == 1
+    datas = [_fixture_bytes(n) for n in FIXTURES]
+    seq, _ = ing.ingest_batch(datas, quality=50, grid=(5, 5), channels=3,
+                              parallel=False)
+    par, _ = ing.ingest_batch(datas, quality=50, grid=(5, 5), channels=3)
+    assert np.array_equal(seq, par)
+    assert ing._POOL is None
+
+
+# ---------------------------------------------------------------------------
+# ingest_pipeline (decode/compute overlap)
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_pipeline_parity_and_order():
+    datas = [_fixture_bytes(FIXTURES[i % len(FIXTURES)]) for i in range(8)]
+    kw = dict(quality=50, grid=(5, 5), channels=3)
+    ref, _ = ing.ingest_batch(datas, parallel=False, **kw)
+    outs = list(ing.ingest_pipeline([datas[:4], datas[4:6], datas[6:]],
+                                    depth=2, **kw))
+    assert [o[0].shape[0] for o in outs] == [4, 2, 2]
+    assert np.array_equal(np.concatenate([o[0] for o in outs]), ref)
+
+
+def test_ingest_pipeline_close_joins_producer():
+    """The prefetch lifecycle contract: a consumer walking away joins the
+    decode thread instead of leaking it."""
+    datas = [_fixture_bytes("gray_q80")] * 2
+
+    def batches():
+        while True:
+            yield datas
+
+    before = threading.active_count()
+    gen = ing.ingest_pipeline(batches(), depth=2, quality=50,
+                              grid=(5, 5), channels=3)
+    batch, _ = next(gen)
+    assert batch.shape[0] == 2
+    gen.close()
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() == before, "decode thread leaked"
+
+
+def test_ingest_pipeline_propagates_decode_error():
+    bad = [[_fixture_bytes("gray_q80")], [b"\xff\xd8 broken"]]
+    gen = ing.ingest_pipeline(bad, depth=2, quality=50, grid=(5, 5),
+                              channels=3)
+    next(gen)
+    with pytest.raises(bs.JpegError):
+        next(gen)

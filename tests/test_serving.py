@@ -263,12 +263,111 @@ def test_scheduler_admission_control(setup):
 def test_scheduler_deadline_misses_recorded(setup):
     spec, params, state, coef, plan = setup
     with _sched(plan, coef) as s:
-        r = s.submit(np.asarray(coef[0]), deadline_s=0.0)
-        r.result(timeout=60)
+        # unwarmed: the first batch pays its jit compile, so a short
+        # deadline is still live at dequeue but gone by completion — a
+        # served-but-missed request
+        r = s.submit(np.asarray(coef[0]), deadline_s=0.2)
+        # while a request already expired when the worker sees it is shed
+        # at dequeue with DeadlineExceeded, never burning a batch slot
+        r2 = s.submit(np.asarray(coef[1]), deadline_s=-0.001)
+        assert np.isfinite(r.result(timeout=60)).all()
+        with pytest.raises(SV.DeadlineExceeded):
+            r2.result(timeout=60)
         s.drain()
     rep = s.metrics.report()
     assert rep["deadline_misses"] >= 1
     assert rep["deadline_miss_rate"] > 0
+    assert rep["deadline_shed"] == 1
+
+
+def test_scheduler_sheds_expired_bytes_before_decode(setup):
+    """An expired bytes request is shed at ingest dequeue — the codec is
+    never invoked for it (the decode would be wasted work)."""
+    from repro.codec import encode_pixels, ingest as ingestlib
+    from repro.core import dct as dctlib
+
+    spec, params, state, coef, plan = setup
+    rng = np.random.default_rng(1)
+    qt = np.rint(dctlib.quantization_table(
+        75, dc_is_mean=False)).astype(np.int64)
+    data = encode_pixels(
+        np.clip(rng.normal(0, 0.3, (3, 16, 16)), -1.0, 127.0 / 128.0),
+        qtable=qt)
+    calls = []
+    orig = ingestlib.ingest_batch
+
+    def spy(datas, **kw):
+        calls.append(len(list(datas)))
+        return orig(datas, **kw)
+
+    with _sched(plan, coef) as s:
+        with pytest.MonkeyPatch.context() as mp:
+            mp.setattr(ingestlib, "ingest_batch", spy)
+            r = s.submit(data, kind="bytes", deadline_s=-0.001)
+            with pytest.raises(SV.DeadlineExceeded):
+                r.result(timeout=60)
+            s.drain()
+    assert calls == []
+    assert s.metrics.report()["deadline_shed"] == 1
+
+
+def _jpeg_traffic(n, seed=0):
+    from repro.codec import encode_pixels
+    from repro.core import dct as dctlib
+
+    rng = np.random.default_rng(seed)
+    qt = np.rint(dctlib.quantization_table(
+        75, dc_is_mean=False)).astype(np.int64)
+    return [encode_pixels(
+        np.clip(rng.normal(0, 0.3, (3, 16, 16)), -1.0, 127.0 / 128.0),
+        qtable=qt) for _ in range(n)]
+
+
+def test_scheduler_decodes_bytes_off_worker(setup):
+    """Entropy decode never runs inline in the execute worker: every
+    ingest_batch call lands on the dedicated ingest thread, and the
+    worker only sees already-decoded coefficient batches."""
+    from repro.codec import ingest as ingestlib
+
+    spec, params, state, coef, plan = setup
+    threads = []
+    orig = ingestlib.ingest_batch
+
+    def spy(datas, **kw):
+        threads.append(threading.current_thread().name)
+        return orig(datas, **kw)
+
+    with _sched(plan, coef) as s:
+        with pytest.MonkeyPatch.context() as mp:
+            mp.setattr(ingestlib, "ingest_batch", spy)
+            reqs = [s.submit(d, kind="bytes")
+                    for d in _jpeg_traffic(4)]
+            reqs += [s.submit(np.asarray(coef[i % coef.shape[0]]))
+                     for i in range(4)]
+            outs = [r.result(timeout=60) for r in reqs]
+    assert all(np.isfinite(o).all() for o in outs)
+    assert threads and set(threads) == {"scheduler-ingest"}
+
+
+def test_scheduler_ingest_wall_split_from_device_wall(setup):
+    """The QoS tier EMA sees device wall only; host decode wall is
+    reported separately (bytes-heavy traffic must not poison the
+    selector with cost no band tier can reduce)."""
+    spec, params, state, coef, plan = setup
+    with _sched(plan, coef) as s:
+        observed = []
+        orig = s.selector.observe
+        s.selector.observe = lambda t, w: (observed.append(w), orig(t, w))[1]
+        for d in _jpeg_traffic(6, seed=2):
+            s.submit(d, kind="bytes")
+        s.drain()
+    rep = s.metrics.report()
+    assert rep["ingest_wall_s"] > 0
+    assert rep["device_wall_s"] > 0
+    assert rep["ingest"]["wall_s"] == rep["ingest_wall_s"]
+    # every observation fed to the EMA is a device wall: they sum to the
+    # reported device total, none contains the decode wall
+    assert observed and abs(sum(observed) - rep["device_wall_s"]) < 1e-6
 
 
 def test_scheduler_mixed_ingest_queues(setup):
