@@ -6,8 +6,10 @@ Speedups are same-run *ratios* (e.g. compiled-over-plan on the same
 machine), so they are comparable across hosts in a way raw microseconds
 are not.  Rows are matched by name against ``--prefix``, a
 comma-separated list of name prefixes (default ``fig5/infer_speedup_``
-plus ``fig5/ingest_speedup_`` — the latter guards the bytes→logits
-serving-concurrency ratio); rows present in only one file are reported
+plus ``fig5/ingest_speedup_`` — the bytes→logits serving-concurrency
+ratio — and ``fig5/grid_throughput_`` — the plan-grid bucketed-capture
+gain on mixed-occupancy traffic); rows present in only one file are
+reported
 but never compared (modes come and go across PRs).  In particular a row
 present only in the *fresh* run — a brand-new benchmark mode, e.g. the
 first run of the ``serving`` overload sweep — is **informational**: it
@@ -60,7 +62,8 @@ def main() -> None:
                     help="allowed fractional drop below baseline (0.2 = "
                          "fail under 80%% of the committed speedup)")
     ap.add_argument("--prefix",
-                    default="fig5/infer_speedup_,fig5/ingest_speedup_",
+                    default="fig5/infer_speedup_,fig5/ingest_speedup_,"
+                            "fig5/grid_throughput_",
                     help="comma-separated list of guarded row-name "
                          "prefixes")
     args = ap.parse_args()

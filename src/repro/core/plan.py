@@ -77,6 +77,7 @@ __all__ = [
     "compile_plan",
     "apply_compiled",
     "apply_compiled_packed",
+    "capture_compiled",
     "save_compiled_plan",
     "load_compiled_plan",
 ]
@@ -801,6 +802,69 @@ def apply_compiled_packed(cp: CompiledPlan, packed: jnp.ndarray,
         coef = pad_bands(packed.reshape(n, bh, bw, st.cin, st.w_in))
         h = _apply_stem(st, coef, cp.phi, path, cfg, executor)
     return _run_blocks(cp, h, cfg, executor)
+
+
+def capture_compiled(cp: CompiledPlan, shape, *, packed: bool = False,
+                     executor: str | None = None, donate: bool = True,
+                     dtype=jnp.float32, on_trace=None):
+    """Capture a **static-shape** jitted entry point over the compiled
+    schedule, with the input buffer donated to the executable.
+
+    ``shape`` is the full batch shape — ``(N, bh, bw, C, 64)`` for the
+    coefficient entry, ``(N, bh, bw, C·w_in)`` with ``packed=True`` for
+    the tile-packed stem entry.  The returned callable traces (and
+    compiles) exactly once: any call at a different shape raises
+    ``ValueError`` at trace time instead of silently retracing, which is
+    the invariant the serving plan grid is built on — after warmup the
+    set of compiled shapes is closed.
+
+    ``donate=True`` passes the input through ``donate_argnums`` so XLA
+    may reuse its device buffer for intermediates (steady-state serving
+    allocates nothing per batch beyond the staged input itself).  Both
+    :func:`apply_compiled` and :func:`apply_compiled_packed` are safe
+    under donation: neither aliases the input into the output, so the
+    caller only loses the donated array — pass a fresh copy per call
+    (``jnp.array`` of a host staging buffer).
+
+    ``on_trace`` (no-arg callable) fires from inside the traced body —
+    i.e. exactly once per compile — giving callers honest compile
+    accounting without reaching into jax internals.
+    """
+    shape = tuple(int(s) for s in shape)
+    apply_fn = apply_compiled_packed if packed else apply_compiled
+
+    def fwd(x):
+        if tuple(x.shape) != shape:
+            raise ValueError(
+                f"captured executable is pinned to shape {shape}, "
+                f"got {tuple(x.shape)} — route through the grid cell "
+                f"for this shape instead of retracing")
+        if on_trace is not None:
+            on_trace()
+        return apply_fn(cp, x, executor=executor)
+
+    fn = jax.jit(fwd, donate_argnums=(0,) if donate else ())
+
+    def call(x):
+        if not traced:
+            # donation is best-effort: when XLA finds no intermediate to
+            # fold into the donated buffer it warns at lowering time —
+            # harmless (the array is still consumed), and one line per
+            # grid cell would drown the serving log
+            import warnings
+
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore",
+                    message="Some donated buffers were not usable")
+                out = fn(jnp.asarray(x, dtype))
+            traced.append(True)
+            return out
+        return fn(jnp.asarray(x, dtype))
+
+    traced: list[bool] = []
+    call.captured_shape = shape
+    return call
 
 
 def _run_blocks(cp: CompiledPlan, h: jnp.ndarray,

@@ -23,8 +23,14 @@ With ``--qos`` the process serves through the **band-elastic runtime**
 (``--tiers``, default autotuned/48/32/24) and an async scheduler with
 admission control and per-request deadlines (``--deadline-ms``) picks the
 tier per batch from queue depth + deadline slack — degrading bands under
-overload, recovering as the queue drains.  The report then carries
-per-request latency percentiles, per-tier throughput, tier-switch events,
+overload, recovering as the queue drains.  Execution runs on the **plan
+grid** (``repro.serving.grid``): every (batch bucket × band tier) cell is
+precompiled at warmup with pinned, donated buffers (``--batch-buckets``
+picks the capture schedule), so steady-state serving performs zero JIT
+compiles and pads partial batches only to the covering bucket.  The
+report then carries per-request latency percentiles, per-tier throughput
+and padding fractions, tier-switch events, compile accounting
+(``compiles_total`` / ``compiles_post_warmup`` / ``grid_cell_hits``),
 and ingest occupancy (``--report-out`` writes it to a file).  Without
 ``--qos`` the original fixed-band slot loop serves, but still reports
 p50/p95/p99 per-request latency through ``serving.metrics``.
@@ -268,6 +274,21 @@ def prepare_plan(args, cfg, dcfg):
     return plan, compiled, info
 
 
+def parse_buckets(spec, batch: int) -> tuple | None:
+    """``--batch-buckets`` string → capture buckets: ``auto``/None → the
+    aphrodite schedule up to ``--batch`` (derived at grid build);
+    ``fixed`` → the single full-batch bucket (pre-grid pad-to-max
+    behaviour); else comma ints, e.g. ``1,2,4,8``."""
+    if spec in (None, ""):
+        return None
+    tok = str(spec).strip().lower()
+    if tok == "auto":
+        return None
+    if tok == "fixed":
+        return (batch,)
+    return tuple(int(t) for t in tok.split(","))
+
+
 def parse_tiers(spec) -> tuple:
     """``--tiers`` string → ladder caps: ``"auto,48,32,24"`` →
     ``(None, 48, 32, 24)`` (``auto``/``top``/``none`` = the plan's own
@@ -285,22 +306,37 @@ def parse_tiers(spec) -> tuple:
 
 def prepare_ladder(args, cfg, plan, plan_dir):
     """Restore the tier ladder from ``plan_dir``, rebuilding when absent
-    or when its caps disagree with ``--tiers`` (same convert-once
-    contract as :func:`prepare_plan` — tiers re-derive bit-exactly from
-    the restored plan)."""
+    or when its caps disagree with ``--tiers`` / its capture buckets
+    with ``--batch-buckets`` (same convert-once contract as
+    :func:`prepare_plan` — tiers re-derive bit-exactly from the restored
+    plan, and the manifest keeps the grid extent so a restart warms up
+    the same cells)."""
     from repro import serving
 
     caps = parse_tiers(getattr(args, "tiers", None))
+    buckets = serving.cover_buckets(
+        parse_buckets(getattr(args, "batch_buckets", None), args.batch),
+        args.batch)
     ladder = None
     try:
         ladder = serving.load_ladder(plan_dir, plan=plan)
         if ladder.caps != caps:
             ladder = None  # different ladder requested — rebuild
+        elif ladder.buckets != buckets:
+            # same tiers, different grid extent: the buckets live only
+            # in the manifest — update it without recompiling any tier.
+            # (Not _replace: PlanLadder.__len__ counts tiers, which
+            # breaks namedtuple._make's arity check.)
+            ladder = serving.PlanLadder(
+                ladder.tiers, ladder.base, ladder.caps, ladder.image_size,
+                ladder.vmem_budget, buckets)
+            serving.save_ladder(ladder, plan_dir, save_base=False)
     except (FileNotFoundError, ValueError, KeyError):
         ladder = None
     if ladder is None:
         ladder = serving.build_ladder(plan, caps=caps,
-                                      image_size=cfg.image_size)
+                                      image_size=cfg.image_size,
+                                      buckets=buckets)
         serving.save_ladder(ladder, plan_dir, save_base=False)
     return ladder
 
@@ -360,6 +396,11 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
         grid=(n_blocks, n_blocks), channels=cfg.in_channels)
     with sched:
         sched.warmup(kinds=(kind,))
+        gs = sched.grid_engine.summary()
+        print(f"[serve] plan grid: {gs['distinct_columns']} tier columns x "
+              f"buckets {gs['buckets']} = {gs['cells']} captured cells "
+              f"({gs['host_staging_bytes'] / 2**20:.1f} MiB pinned host "
+              f"staging); post-warmup compiles will be reported")
         t0 = time.time()
         requests = []
         for i in range(total):
@@ -390,6 +431,7 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
         agree = float(np.mean(ref.argmax(-1) == served.argmax(-1)))
 
     qos_report = metrics.report()
+    qos_report["grid"] = gs
     qos_report["tiers"] = [
         {"name": t.name, "cap": t.cap,
          "bands": sorted(set(t.bands.values()))} for t in ladder.tiers]
@@ -618,6 +660,12 @@ def main() -> None:
                     help="ladder band caps for --qos, best first, e.g. "
                          "'auto,48,32,24' (auto = the plan's own "
                          "autotuned assignment; default that ladder)")
+    ap.add_argument("--batch-buckets", default=None,
+                    help="batch capture buckets of the --qos plan grid: "
+                         "'auto' (default; aphrodite schedule 1,2,4 then "
+                         "multiples of 8 up to --batch), 'fixed' (single "
+                         "full-batch bucket — the pre-grid pad-to-max "
+                         "behaviour), or comma ints e.g. '1,2,4,8'")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline for --qos; feeds the "
                          "QoS tier policy and the deadline-miss metric")

@@ -8,6 +8,11 @@ serving subsystem on top of the convert-once engine (``core.plan``):
 * :mod:`repro.serving.ladder` — one ``InferencePlan`` compiled into a
   **plan ladder** of band tiers whose operators are prefix-slices of the
   same exploded Ξ buffers, with bit-exact save/restore;
+* :mod:`repro.serving.grid` — the ladder made 2-D: a **plan grid** of
+  precompiled (batch bucket × band tier) executors (aphrodite-style
+  capture buckets 1, 2, 4, multiples of 8) with pinned host staging and
+  input donation, so steady-state serving does zero compiles, zero
+  reshapes, and pads only to the covering bucket;
 * :mod:`repro.serving.scheduler` — an async request scheduler with
   admission control, per-request deadlines, and mixed
   ``coefficients``/``bytes`` ingest queues feeding ``repro.codec``;
@@ -21,6 +26,16 @@ serving subsystem on top of the convert-once engine (``core.plan``):
 ``--tiers``, ``--deadline-ms``); ``benchmarks/fig5_throughput.py``'s
 ``serving`` mode measures fixed-band vs elastic under overload.
 """
+from repro.serving.grid import (
+    GridCell,
+    GridColumn,
+    PinnedPool,
+    PlanGrid,
+    batch_buckets,
+    bucket_for,
+    cover_buckets,
+    validate_buckets,
+)
 from repro.serving.ladder import (
     DEFAULT_CAPS,
     PlanLadder,
@@ -41,6 +56,14 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "DEFAULT_CAPS",
+    "GridCell",
+    "GridColumn",
+    "PinnedPool",
+    "PlanGrid",
+    "batch_buckets",
+    "bucket_for",
+    "cover_buckets",
+    "validate_buckets",
     "PlanLadder",
     "PlanTier",
     "build_ladder",

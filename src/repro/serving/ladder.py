@@ -68,13 +68,22 @@ class PlanTier(NamedTuple):
 
 
 class PlanLadder(NamedTuple):
-    """An ordered tier stack, index 0 = best quality (widest bands)."""
+    """An ordered tier stack, index 0 = best quality (widest bands).
+
+    ``buckets`` (optional, trailing for positional-construction compat)
+    records the batch capture buckets the ladder was prepared to serve —
+    ``serving.grid.PlanGrid`` defaults to them, and the manifest
+    persists them so a serve process restores the same grid extent it
+    warmed up last time.  ``None`` = derive the aphrodite schedule from
+    the scheduler's batch size at grid-build time.
+    """
 
     tiers: tuple[PlanTier, ...]
     base: planlib.InferencePlan
     caps: tuple[int | None, ...]
     image_size: int | None
     vmem_budget: int
+    buckets: tuple[int, ...] | None = None
 
     @property
     def top(self) -> PlanTier:
@@ -147,14 +156,21 @@ def _validate_caps(caps) -> tuple[int | None, ...]:
 def build_ladder(plan: planlib.InferencePlan, *,
                  caps=DEFAULT_CAPS,
                  image_size: int | None = None,
-                 vmem_budget: int = planlib.VMEM_BUDGET) -> PlanLadder:
+                 vmem_budget: int = planlib.VMEM_BUDGET,
+                 buckets=None) -> PlanLadder:
     """Compile ``plan`` into a tier ladder at the given band budgets.
 
     Tiers are ordered best-quality first; caps wider than the plan's own
     assignment collapse onto the previous tier (sharing its compiled
-    schedule rather than compiling a duplicate).
+    schedule rather than compiling a duplicate).  ``buckets`` pins the
+    batch capture buckets the serving grid should precompile (see
+    :class:`PlanLadder`).
     """
     caps = _validate_caps(caps)
+    if buckets is not None:
+        from repro.serving.grid import validate_buckets
+
+        buckets = validate_buckets(buckets)
     tiers: list[PlanTier] = []
     by_bands: dict[tuple, int] = {}
     for cap in caps:
@@ -171,7 +187,8 @@ def build_ladder(plan: planlib.InferencePlan, *,
         by_bands[key] = len(tiers)
         tiers.append(PlanTier(_tier_name(cap), cap, dict(capped.bands),
                               capped, compiled))
-    return PlanLadder(tuple(tiers), plan, caps, image_size, vmem_budget)
+    return PlanLadder(tuple(tiers), plan, caps, image_size, vmem_budget,
+                      buckets)
 
 
 # --------------------------------------------------------------------------
@@ -199,6 +216,9 @@ def save_ladder(ladder: PlanLadder, directory: str, *,
         "caps": [c for c in ladder.caps],
         "image_size": ladder.image_size,
         "vmem_budget": int(ladder.vmem_budget),
+        # absent in pre-grid manifests; .get(None) on load keeps format 1
+        "buckets": (None if ladder.buckets is None
+                    else [int(b) for b in ladder.buckets]),
         "tiers": [{"name": t.name, "cap": t.cap, "bands": t.bands,
                    "shared_with": t.shared_with} for t in ladder.tiers],
     }
@@ -228,11 +248,13 @@ def load_ladder(directory: str, *,
     if plan is None:
         plan = planlib.load_plan(directory)
     caps = tuple(None if c is None else int(c) for c in extra["caps"])
+    buckets = extra.get("buckets")
     ladder = build_ladder(
         plan, caps=caps,
         image_size=(None if extra.get("image_size") is None
                     else int(extra["image_size"])),
-        vmem_budget=int(extra["vmem_budget"]))
+        vmem_budget=int(extra["vmem_budget"]),
+        buckets=None if buckets is None else tuple(int(b) for b in buckets))
     for tier, meta in zip(ladder.tiers, extra["tiers"]):
         saved = {k: int(v) for k, v in meta["bands"].items()}
         if saved != tier.bands:

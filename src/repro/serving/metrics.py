@@ -61,6 +61,12 @@ class ServeMetrics:
         self._ingest: list[Any] = []
         self._ingest_wall_s = 0.0
         self._device_wall_s = 0.0
+        self._images = 0
+        self._slots = 0
+        self._cell_hits: dict[str, int] = {}
+        self._compiles_total = 0
+        self._compiles_post_warmup = 0
+        self._compiled_cells: list[dict[str, Any]] = []
 
     # ------------------------------------------------------------- requests
     def record_request(self, latency_s: float, *, tier: str | None = None,
@@ -87,24 +93,51 @@ class ServeMetrics:
     # -------------------------------------------------------------- batches
     def record_batch(self, tier: str, images: int, wall_s: float,
                      queue_depth: int | None = None,
-                     ingest_s: float | None = None) -> None:
+                     ingest_s: float | None = None,
+                     slots: int | None = None,
+                     cell: str | None = None) -> None:
         """One executed batch.  ``wall_s`` is *device* wall (what the QoS
         selector is fed); ``ingest_s``, when given, is the host entropy
         decode wall the ingest thread spent on this batch — kept separate
-        so bytes-heavy traffic cannot poison per-tier latency."""
+        so bytes-heavy traffic cannot poison per-tier latency.
+
+        ``slots`` is the padded batch width the executor actually ran
+        (the capture bucket) — ``slots - images`` slots were padding, and
+        the report's ``padding_fraction`` aggregates that waste.
+        ``cell`` names the grid cell that served the batch (per-cell hit
+        counts land in ``grid_cell_hits``)."""
         with self._lock:
             t = self._tiers.setdefault(
                 tier, {"batches": 0, "images": 0, "wall_s": 0.0,
-                       "max_queue_depth": 0})
+                       "max_queue_depth": 0, "slots": 0})
             t["batches"] += 1
             t["images"] += int(images)
             t["wall_s"] += float(wall_s)
             self._device_wall_s += float(wall_s)
+            self._images += int(images)
+            if slots is not None:
+                t["slots"] += int(slots)
+                self._slots += int(slots)
+            if cell is not None:
+                self._cell_hits[cell] = self._cell_hits.get(cell, 0) + 1
             if ingest_s is not None:
                 self._ingest_wall_s += float(ingest_s)
             if queue_depth is not None:
                 t["max_queue_depth"] = max(t["max_queue_depth"],
                                            int(queue_depth))
+
+    def record_compile(self, cell: str, *, post_warmup: bool = False
+                       ) -> None:
+        """One executable trace/compile (fired from inside the traced
+        body, so exactly once per compile).  ``post_warmup`` marks a
+        compile after :meth:`BandElasticScheduler.warmup` declared the
+        shape set closed — steady-state serving must report zero."""
+        with self._lock:
+            self._compiles_total += 1
+            if post_warmup:
+                self._compiles_post_warmup += 1
+            self._compiled_cells.append({"cell": cell,
+                                         "post_warmup": bool(post_warmup)})
 
     def record_switch(self, batch_seq: int, from_tier: str, to_tier: str,
                       reason: str) -> None:
@@ -141,9 +174,18 @@ class ServeMetrics:
                     "latency_ms": percentiles(
                         self._per_tier_latencies.get(name, ())),
                 }
+                if t["slots"]:
+                    per_tier[name]["padding_fraction"] = round(
+                        1.0 - t["images"] / t["slots"], 4)
             out: dict[str, Any] = {
                 "requests": self._requests,
                 "rejected": self._rejected,
+                "padding_fraction": (
+                    round(1.0 - self._images / self._slots, 4)
+                    if self._slots else None),
+                "compiles_total": self._compiles_total,
+                "compiles_post_warmup": self._compiles_post_warmup,
+                "grid_cell_hits": dict(self._cell_hits),
                 "deadline_misses": self._deadline_misses,
                 "deadline_miss_rate": round(
                     self._deadline_misses / max(self._requests, 1), 4),
@@ -154,6 +196,12 @@ class ServeMetrics:
                 "per_tier": per_tier,
                 "tier_switches": list(self._switches),
             }
+            if self._compiles_post_warmup:
+                # name the offending cells so a CI zero-compile assertion
+                # failure points straight at the missing warmup shape
+                out["post_warmup_compiles"] = [
+                    c["cell"] for c in self._compiled_cells
+                    if c["post_warmup"]]
             if self._ingest:
                 from repro.codec import merge_stats
 

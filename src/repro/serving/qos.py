@@ -74,40 +74,74 @@ class TierSelector:
         self._over = 0
         self._under = 0
         self._seq = 0
-        self._latency: dict[int, float] = {}
+        # keyed (tier, bucket): the plan grid runs one executable per
+        # batch bucket, and a bucket-1 batch says nothing about bucket-8
+        # latency — bucket=None is the pre-grid wildcard (fixed-shape
+        # schedulers and the unit tests), matching any bucket on read
+        self._latency: dict[tuple[int, int | None], float] = {}
 
     # ------------------------------------------------------------ estimates
-    def observe(self, tier: int, batch_wall_s: float) -> None:
-        """Fold one completed batch's wall clock into the tier's EMA."""
+    def observe(self, tier: int, batch_wall_s: float, *,
+                bucket: int | None = None) -> None:
+        """Fold one completed batch's wall clock into the (tier, bucket)
+        cell's EMA (``bucket=None`` = the tier-wide wildcard cell)."""
         a = self.policy.latency_ema
-        prev = self._latency.get(tier)
-        self._latency[tier] = (batch_wall_s if prev is None
-                               else a * batch_wall_s + (1 - a) * prev)
+        key = (tier, bucket)
+        prev = self._latency.get(key)
+        self._latency[key] = (batch_wall_s if prev is None
+                              else a * batch_wall_s + (1 - a) * prev)
 
-    def est_latency(self, tier: int) -> float | None:
-        """Best latency estimate for ``tier``: its own EMA, else the
-        nearest observed tier's (better a stale neighbour than nothing)."""
-        if tier in self._latency:
-            return self._latency[tier]
+    def _tier_latency(self, tier: int, bucket: int | None) -> float | None:
+        """Best estimate within one tier: the exact (tier, bucket) cell,
+        else the tier's nearest observed bucket (wildcard entries match
+        at distance 0; with no target bucket the *largest* observed
+        bucket wins — the conservative, worst-case-latency choice)."""
+        exact = self._latency.get((tier, bucket))
+        if exact is not None:
+            return exact
+        best, best_d = None, None
+        for (t, b), v in self._latency.items():
+            if t != tier:
+                continue
+            if bucket is None:
+                d = -(b if b is not None else 1 << 30)
+            else:
+                d = 0 if b is None else abs(b - bucket)
+            if best_d is None or d < best_d:
+                best, best_d = v, d
+        return best
+
+    def est_latency(self, tier: int, bucket: int | None = None
+                    ) -> float | None:
+        """Best latency estimate for ``tier`` (at ``bucket``, when the
+        grid knows it): the tier's own cells, else the nearest observed
+        tier's (better a stale neighbour than nothing)."""
+        own = self._tier_latency(tier, bucket)
+        if own is not None:
+            return own
         for d in range(1, self.n_tiers):
             for t in (tier - d, tier + d):
-                if t in self._latency:
-                    return self._latency[t]
+                est = self._tier_latency(t, bucket)
+                if est is not None:
+                    return est
         return None
 
     # ------------------------------------------------------------ selection
     def select(self, *, pending: int, batch: int,
-               head_slack_s: float | None = None) -> int:
+               head_slack_s: float | None = None,
+               bucket: int | None = None) -> int:
         """Tier for the next batch.
 
         ``pending`` — total queued requests; ``batch`` — slot count;
         ``head_slack_s`` — remaining time until the oldest queued
-        request's deadline (None = no deadline traffic).
+        request's deadline (None = no deadline traffic); ``bucket`` —
+        the capture bucket the batch will run in, keying the latency
+        estimates to the right grid cell.
         """
         self._seq += 1
         p = self.policy
         depth = pending / max(batch, 1)
-        est = self.est_latency(self.tier)
+        est = self.est_latency(self.tier, bucket)
 
         overload = depth >= p.high_depth
         reason = f"queue depth {pending} >= {p.high_depth:g}x batch {batch}"
@@ -119,7 +153,7 @@ class TierSelector:
 
         drained = depth <= p.low_depth
         if drained and self.tier > 0:
-            better = self.est_latency(self.tier - 1)
+            better = self.est_latency(self.tier - 1, bucket)
             if head_slack_s is not None and better is not None \
                     and better * p.recover_margin > head_slack_s:
                 drained = False  # recovery would blow the head deadline

@@ -21,11 +21,16 @@ runtime object:
   dequeue are shed (failed with :class:`DeadlineExceeded`, counted as
   ``deadline_shed``) instead of burning a batch slot, and completions
   past their deadline are recorded as misses;
-* **band-elastic execution** — before each batch the
+* **band-elastic execution over the plan grid** — before each batch the
   :class:`repro.serving.qos.TierSelector` picks the ladder tier from
-  queue depth + deadline slack; the batch runs through that tier's
-  compiled schedule.  Batches are padded to the fixed slot count so each
-  tier compiles exactly once per ingest kind (no retrace per tail size).
+  queue depth + deadline slack; the batch then runs in the smallest
+  **capture bucket** covering its size (``repro.serving.grid`` — the
+  aphrodite schedule 1, 2, 4, multiples of 8), through that
+  (tier × bucket) cell's precompiled, input-donated executable.
+  :meth:`warmup` sweeps the whole grid so steady-state serving performs
+  zero JIT compiles and pads only to the covering bucket, never to
+  ``max_batch``; every trace is counted (``ServeMetrics.record_compile``)
+  and any compile after warmup is reported as ``compiles_post_warmup``.
 
 Lifecycle mirrors the ``data.pipeline.prefetch`` contract: the worker
 thread is owned by the scheduler — :meth:`close` (or leaving the
@@ -43,9 +48,8 @@ from typing import Any
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import plan as planlib
+from repro.serving.grid import PlanGrid
 from repro.serving.ladder import PlanLadder
 from repro.serving.metrics import ServeMetrics
 from repro.serving.qos import QosPolicy, TierSelector
@@ -110,8 +114,19 @@ class ServeRequest:
         self._event.set()
 
 
-class _TierExec:
-    """Jitted executors for one distinct compiled schedule.
+class BandElasticScheduler:
+    """Continuous-batching scheduler with a band-elastic tier policy.
+
+    ``grid``/``channels`` describe the serving resolution (block grid of
+    the coefficient layout); they are required for ``bytes`` ingest and
+    for :meth:`warmup`.  ``policy=None`` with ``len(ladder) > 1`` uses
+    the default :class:`QosPolicy`; a single-tier ladder pins tier 0
+    (the fixed-band configuration the benchmarks compare against).
+
+    ``buckets`` pins the batch capture buckets of the plan grid (default:
+    the ladder's own recorded buckets, else the aphrodite schedule up to
+    ``batch`` — see ``serving.grid.cover_buckets``); ``buckets=(batch,)``
+    reproduces the pre-grid pad-to-``max_batch`` behaviour.
 
     ``executor`` selects the compiled-plan lowering (see
     ``core.plan.apply_compiled``): the band-elastic runtime defaults to
@@ -123,36 +138,15 @@ class _TierExec:
     packed operands) is already band-elastic and is kept.
     """
 
-    def __init__(self, compiled: planlib.CompiledPlan,
-                 executor: str | None = None):
-        self.compiled = compiled
-        self.executor = executor
-        self.coef_fn = jax.jit(
-            lambda c: planlib.apply_compiled(compiled, c,
-                                             executor=executor))
-        self.packed_fn = jax.jit(
-            lambda c: planlib.apply_compiled_packed(compiled, c,
-                                                    executor=executor))
-        self.w_in = compiled.stem.w_in
-
-
-class BandElasticScheduler:
-    """Continuous-batching scheduler with a band-elastic tier policy.
-
-    ``grid``/``channels`` describe the serving resolution (block grid of
-    the coefficient layout); they are required for ``bytes`` ingest and
-    for :meth:`warmup`.  ``policy=None`` with ``len(ladder) > 1`` uses
-    the default :class:`QosPolicy`; a single-tier ladder pins tier 0
-    (the fixed-band configuration the benchmarks compare against).
-    """
-
     def __init__(self, ladder: PlanLadder, *, batch: int = 8,
                  policy: QosPolicy | None = None,
                  metrics: ServeMetrics | None = None,
                  max_pending: int = 64,
                  grid: tuple[int, int] | None = None,
                  channels: int = 3,
-                 executor: str | None = "auto"):
+                 executor: str | None = "auto",
+                 buckets=None,
+                 donate: bool = True):
         if batch < 1:
             raise ValueError("batch must be >= 1")
         if executor == "auto":
@@ -167,16 +161,18 @@ class BandElasticScheduler:
         self.grid = grid
         self.channels = channels
         self.quality = ladder.base.spec.quality
+        self._warmed = False
 
-        # one executor per *distinct* compiled schedule; shared tiers
-        # reuse the jitted functions (and therefore the compile cache)
-        execs: dict[int, _TierExec] = {}
-        self._execs: list[_TierExec] = []
-        for tier in ladder.tiers:
-            key = id(tier.compiled)
-            if key not in execs:
-                execs[key] = _TierExec(tier.compiled, executor)
-            self._execs.append(execs[key])
+        # the (batch bucket × band tier) executor grid: one column per
+        # *distinct* compiled schedule (shared tiers reuse cells and
+        # their compile cache), one captured, input-donated executable
+        # per (kind, bucket) cell
+        self.grid_engine = PlanGrid(
+            ladder, batch=batch, buckets=buckets, grid=grid,
+            channels=channels, executor=executor, donate=donate,
+            on_compile=self._note_compile)
+        self.buckets = self.grid_engine.buckets
+        self._execs = self.grid_engine.columns
         self.tier_names = [t.name for t in ladder.tiers]
 
         self.selector = TierSelector(
@@ -254,28 +250,24 @@ class BandElasticScheduler:
             return self._images
 
     # ------------------------------------------------------------ lifecycle
+    def _note_compile(self, cell: str) -> None:
+        """Fires from inside every cell's traced body — exactly once per
+        compile.  After :meth:`warmup` the shape set is closed, so any
+        further firing is a mid-traffic compile the report must show."""
+        self.metrics.record_compile(cell, post_warmup=self._warmed)
+
     def warmup(self, kinds=KINDS) -> None:
-        """Compile every distinct tier executor at the fixed batch shape
-        so tier switches never pay an inline trace.  ``kinds`` limits the
-        compiles to the ingest kinds the caller will actually submit — a
-        coefficients-only serve has no reason to pay the packed-stem
-        compiles (and vice versa)."""
+        """Sweep the whole plan grid: compile every (kind × bucket × tier)
+        cell so steady-state serving — including tier switches and every
+        partial-batch bucket — never pays an inline trace.  ``kinds``
+        limits the sweep to the ingest kinds the caller will actually
+        submit — a coefficients-only serve has no reason to pay the
+        packed-stem compiles (and vice versa).  After the sweep, any
+        compile is counted as ``compiles_post_warmup``."""
         if self.grid is None:
             raise ValueError("warmup needs grid= at construction")
-        bh, bw = self.grid
-        coef = jnp.zeros((self.batch, bh, bw, self.channels, 64),
-                         jnp.float32)
-        done = set()
-        for ex in self._execs:
-            if id(ex) in done:
-                continue
-            done.add(id(ex))
-            if "coefficients" in kinds:
-                ex.coef_fn(coef).block_until_ready()
-            if "bytes" in kinds:
-                packed = jnp.zeros((self.batch, bh, bw,
-                                    self.channels * ex.w_in), jnp.float32)
-                ex.packed_fn(packed).block_until_ready()
+        self.grid_engine.warmup(kinds)
+        self._warmed = True
 
     def drain(self, timeout: float | None = None) -> bool:
         """Block until every submitted request has completed (or the
@@ -462,9 +454,17 @@ class BandElasticScheduler:
                     now = time.monotonic()
                     slack = self._head_slack_locked(now)
                     depth = self._pending_locked()
-                    tier_ix = self.selector.select(
-                        pending=depth, batch=self.batch, head_slack_s=slack)
                     reqs, decoded, shed = self._take_batch_locked(now)
+                    tier_ix = None
+                    if reqs:
+                        # tier selection happens *after* the take so the
+                        # capture bucket is known and the QoS estimates
+                        # key to the right grid cell (a bucket-1 trickle
+                        # must not be judged by bucket-8 latency)
+                        tier_ix = self.selector.select(
+                            pending=depth, batch=self.batch,
+                            head_slack_s=slack,
+                            bucket=self.grid_engine.bucket_for(len(reqs)))
                     self._in_flight = len(reqs)
                 self._shed(shed)
                 if not reqs:
@@ -489,26 +489,31 @@ class BandElasticScheduler:
         ex = self._execs[tier_ix]
         name = self.tier_names[tier_ix]
         n = len(reqs)
+        bucket = self.grid_engine.bucket_for(n)
         ingest_wall = None
         t0 = time.monotonic()
         if reqs[0].kind == "bytes":
             from repro.codec import ingest as ingestlib
 
             # decode already happened on the ingest thread; only the
-            # pack-to-tier-width slice and the device walk run here
+            # pack-to-tier-width slice and the device walk run here.
+            # Rows go in *unpadded*: the grid cell stages them into its
+            # pinned bucket-shaped buffer and zero-fills the pad tail.
             coef, ingest_wall = decoded
-            batch = self._pad(ingestlib.pack_tiles(coef, ex.w_in))
-            logits = np.asarray(ex.packed_fn(jnp.asarray(batch)))
+            kind = "bytes"
+            logits = np.asarray(ex.packed_fn(
+                ingestlib.pack_tiles(coef, ex.w_in)))
         else:
-            batch = self._pad(np.stack(
-                [np.asarray(r.payload, np.float32) for r in reqs]))
-            logits = np.asarray(ex.coef_fn(jnp.asarray(batch)))
+            kind = "coefficients"
+            logits = np.asarray(ex.coef_fn(np.stack(
+                [np.asarray(r.payload, np.float32) for r in reqs])))
         wall = time.monotonic() - t0
         # only device wall reaches the QoS EMA: host decode cost is
         # band-independent, so folding it in would poison tier selection
-        self.selector.observe(tier_ix, wall)
+        self.selector.observe(tier_ix, wall, bucket=bucket)
         self.metrics.record_batch(name, n, wall, queue_depth=depth,
-                                  ingest_s=ingest_wall)
+                                  ingest_s=ingest_wall, slots=bucket,
+                                  cell=f"{name}/{kind}/b{bucket}")
         now = time.monotonic()
         for i, r in enumerate(reqs):
             r._complete(logits[i], name)
@@ -521,15 +526,6 @@ class BandElasticScheduler:
             self._batches += 1
             self._images += n
             self._idle.notify_all()
-
-    def _pad(self, arr: np.ndarray) -> np.ndarray:
-        """Zero-pad the batch axis to the fixed slot count (one compiled
-        shape per tier per ingest kind)."""
-        if arr.shape[0] == self.batch:
-            return arr
-        pad = np.zeros((self.batch - arr.shape[0], *arr.shape[1:]),
-                       arr.dtype)
-        return np.concatenate([arr, pad])
 
     def _fail_all(self, err: BaseException, record: bool = True) -> None:
         with self._idle:

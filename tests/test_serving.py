@@ -357,7 +357,8 @@ def test_scheduler_ingest_wall_split_from_device_wall(setup):
     with _sched(plan, coef) as s:
         observed = []
         orig = s.selector.observe
-        s.selector.observe = lambda t, w: (observed.append(w), orig(t, w))[1]
+        s.selector.observe = (
+            lambda t, w, **kw: (observed.append(w), orig(t, w, **kw))[1])
         for d in _jpeg_traffic(6, seed=2):
             s.submit(d, kind="bytes")
         s.drain()
