@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--ingest", default="coefficients",
                     choices=("coefficients", "bytes"))
     ap.add_argument("--plan-dir", default=None)
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-drill the run (needs --ingest bytes): "
+                         "corrupt 20%% of requests, kill an ingest "
+                         "worker, fail two executor dispatches")
     args = ap.parse_args()
     ns = argparse.Namespace(arch="jpeg-resnet", reduced=True, qos=True,
                             batch=args.batch, requests=args.requests,
@@ -35,7 +39,8 @@ def main() -> None:
                             autotune_bands=False, compiled=None,
                             ingest=args.ingest, jpeg_dir=None,
                             tiers=args.tiers, deadline_ms=args.deadline_ms,
-                            max_queue=None, report_out=None)
+                            max_queue=None, report_out=None,
+                            chaos=args.chaos)
     out = serve_jpeg_resnet(ns)
     qos = out["qos"]
     lat = out["latency_ms"]
@@ -54,6 +59,20 @@ def main() -> None:
               f"({sw['reason']})")
     print(f"  top-tier top-1 agreement vs plan walk: "
           f"{qos['top1_agree_top_tier']}")
+    health = out["health"]
+    print(f"  health: breaker {health['breaker']['state']}, "
+          f"failures {qos['failures_total'] or '{}'}, "
+          f"pool restarts {qos['pool_restarts']}")
+    for ev in qos["breaker_timeline"]:
+        print(f"  breaker @{ev['seq']}: {ev['from']} -> {ev['to']} "
+              f"({ev['reason']})")
+    if "chaos" in out:
+        ch = out["chaos"]
+        print(f"  chaos: {ch['corrupted']} corrupted "
+              f"({ch['corrupt_modes']}), worker kill pid "
+              f"{ch['killed_worker_pid']}, failed by stage "
+              f"{ch['failed_by_stage']}, healthy "
+              f"{ch['healthy_completed']}/{ch['healthy_total']} completed")
 
 
 if __name__ == "__main__":

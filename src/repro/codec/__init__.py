@@ -10,7 +10,8 @@ band statistics (:mod:`~repro.codec.ingest`).  Numpy-pure — no jax, no
 pixels, no external codec libraries.
 """
 from repro.codec.bitstream import (  # noqa: F401
-    DecodedJpeg, JpegError, UnsupportedJpegError, decode_jpeg,
+    CodecError, DecodedJpeg, EntropyError, HuffmanError, JpegError,
+    MarkerError, TruncatedJpegError, UnsupportedJpegError, decode_jpeg,
     decode_scan, prepare_scan,
 )
 from repro.codec.encode import (  # noqa: F401
@@ -22,15 +23,17 @@ from repro.codec.lockstep import (  # noqa: F401
 from repro.codec.normalize import normalize_image  # noqa: F401
 from repro.codec.ingest import (  # noqa: F401
     IngestStats, decode_bytes, ingest_batch, ingest_pipeline,
-    ingest_workers, merge_stats, pack_tiles, shutdown_pool,
+    ingest_workers, merge_stats, pack_tiles, pool_restarts, shutdown_pool,
 )
 
 __all__ = [
-    "DecodedJpeg", "JpegError", "UnsupportedJpegError", "decode_jpeg",
-    "decode_scan", "prepare_scan",
+    "CodecError", "DecodedJpeg", "EntropyError", "HuffmanError",
+    "JpegError", "MarkerError", "TruncatedJpegError", "UnsupportedJpegError",
+    "decode_jpeg", "decode_scan", "prepare_scan",
     "encode_baseline", "encode_pixels", "quantize_pixels",
     "LOCKSTEP_MIN_STREAMS", "count_streams", "decode_scans",
     "normalize_image",
     "IngestStats", "decode_bytes", "ingest_batch", "ingest_pipeline",
-    "ingest_workers", "merge_stats", "pack_tiles", "shutdown_pool",
+    "ingest_workers", "merge_stats", "pack_tiles", "pool_restarts",
+    "shutdown_pool",
 ]

@@ -42,7 +42,12 @@ import numpy as np
 from repro.core import dct as dctlib
 
 __all__ = [
+    "CodecError",
     "JpegError",
+    "TruncatedJpegError",
+    "MarkerError",
+    "HuffmanError",
+    "EntropyError",
     "UnsupportedJpegError",
     "HuffmanTable",
     "FrameComponent",
@@ -88,8 +93,67 @@ _UNSUPPORTED_HINT = (
     "extension")
 
 
-class JpegError(ValueError):
+def _rebuild_codec_error(cls, message, offset, marker):
+    """Unpickle helper (module-level so spawn pool workers can ship
+    :class:`CodecError` instances back to the parent with context intact)."""
+    return cls(message, offset=offset, marker=marker)
+
+
+class CodecError(ValueError):
+    """Base of the codec error hierarchy: malformed, truncated, or
+    unsupported compressed input.
+
+    Carries structured context for fault isolation and debugging:
+    ``offset`` — the byte offset of the failure (relative to the buffer
+    being parsed: file-relative during marker parsing, segment-relative
+    during entropy decode) — and ``marker`` — the JPEG marker byte being
+    handled, when one is implicated.  Both land in ``str(err)``.
+
+    A ``CodecError`` means *this input* is bad, never that the decoder is
+    unhealthy: the serving stack fails the offending request individually
+    and keeps serving (``serving.scheduler``), and these errors do not
+    feed the circuit breaker.  Subclasses ``ValueError`` so pre-existing
+    ``except ValueError`` call sites keep working.
+    """
+
+    def __init__(self, message: str, *, offset: int | None = None,
+                 marker: int | None = None):
+        self.raw_message = message
+        self.offset = offset
+        self.marker = marker
+        ctx = []
+        if marker is not None:
+            ctx.append(f"marker 0x{marker:02X}")
+        if offset is not None:
+            ctx.append(f"byte {offset}")
+        super().__init__(message + (f" [{', '.join(ctx)}]" if ctx else ""))
+
+    def __reduce__(self):  # keep offset/marker across process boundaries
+        return (_rebuild_codec_error,
+                (type(self), self.raw_message, self.offset, self.marker))
+
+
+class JpegError(CodecError):
     """Malformed or truncated JPEG bitstream."""
+
+
+class TruncatedJpegError(JpegError):
+    """The stream ended before the structure it promised (cut file,
+    missing EOI, segment shorter than its length field)."""
+
+
+class MarkerError(JpegError):
+    """Structurally invalid marker sequence or segment body."""
+
+
+class HuffmanError(JpegError):
+    """Inconsistent or overfull Huffman table definition (DHT)."""
+
+
+class EntropyError(JpegError):
+    """The entropy-coded data itself is invalid: unknown Huffman prefix,
+    bit reads past the segment, coefficient runs past the block.
+    ``offset`` is the bit cursor's byte position *within the segment*."""
 
 
 class UnsupportedJpegError(JpegError):
@@ -154,7 +218,7 @@ def build_huffman_lut(counts: np.ndarray, symbols: np.ndarray) -> HuffmanTable:
     counts = np.asarray(counts, np.int64)
     symbols = np.asarray(symbols, np.int64)
     if counts.shape != (16,) or symbols.shape[0] != int(counts.sum()):
-        raise JpegError("inconsistent DHT counts/symbols")
+        raise HuffmanError("inconsistent DHT counts/symbols", marker=DHT)
     lut = np.full(1 << 16, -1, np.int32)
     code = 0
     si = 0
@@ -164,7 +228,8 @@ def build_huffman_lut(counts: np.ndarray, symbols: np.ndarray) -> HuffmanTable:
             lo = code << (16 - length)
             hi = (code + 1) << (16 - length)
             if hi > (1 << 16):
-                raise JpegError("Huffman code overflows 16 bits")
+                raise HuffmanError("Huffman code overflows 16 bits",
+                                   marker=DHT)
             lut[lo:hi] = (int(symbols[si]) << 8) | length
             si += 1
             code += 1
@@ -190,42 +255,47 @@ def _cached_table(counts: bytes, symbols: bytes) -> HuffmanTable:
 
 def _u16(data: bytes, at: int) -> int:
     if at + 2 > len(data):
-        raise JpegError("truncated segment length")
+        raise TruncatedJpegError("truncated segment length", offset=at)
     return (data[at] << 8) | data[at + 1]
 
 
 def parse_segments(data: bytes):
-    """Yield ``(marker, payload, ecs)`` triples in file order.
+    """Yield ``(marker, payload, ecs, offset)`` tuples in file order.
 
     ``payload`` is the marker segment body (without the length field);
     ``ecs`` is the entropy-coded byte string following an SOS marker (up to
     but excluding the next non-RST marker), ``b""`` elsewhere.  RST markers
     stay embedded in ``ecs`` — the entropy decoder splits on them.
+    ``offset`` is the file offset of the payload's first byte (of the
+    position after the marker code for payload-less markers), so structural
+    errors inside a segment can name their absolute byte position.
     """
     if data[:2] != b"\xff\xd8":
-        raise JpegError("missing SOI marker — not a JPEG")
-    yield SOI, b"", b""
+        raise MarkerError("missing SOI marker — not a JPEG", offset=0)
+    yield SOI, b"", b"", 2
     pos = 2
     n = len(data)
     while pos < n:
         if data[pos] != 0xFF:
-            raise JpegError(f"expected marker at byte {pos}")
+            raise MarkerError("expected a marker", offset=pos)
         while pos < n and data[pos] == 0xFF:  # fill bytes are legal
             pos += 1
         if pos >= n:
-            raise JpegError("truncated marker")
+            raise TruncatedJpegError("truncated marker", offset=pos)
         marker = data[pos]
         pos += 1
         if marker == EOI:
-            yield EOI, b"", b""
+            yield EOI, b"", b"", pos
             return
         if RST0 <= marker <= RST7 or marker == 0x01:
-            yield marker, b"", b""
+            yield marker, b"", b"", pos
             continue
         length = _u16(data, pos)
         if length < 2 or pos + length > n:
-            raise JpegError("bad segment length")
+            raise MarkerError(f"bad segment length {length}", offset=pos,
+                              marker=marker)
         payload = data[pos + 2: pos + length]
+        payload_off = pos + 2
         pos += length
         ecs = b""
         if marker == SOS:
@@ -237,14 +307,17 @@ def parse_segments(data: bytes):
             stop = np.nonzero((arr[start: n - 1] == 0xFF) & (nxt != 0x00)
                               & ~((RST0 <= nxt) & (nxt <= RST7)))[0]
             if stop.size == 0:
-                raise JpegError("entropy-coded data ran past end of file")
+                raise TruncatedJpegError(
+                    "entropy-coded data ran past end of file", offset=start,
+                    marker=SOS)
             pos = start + int(stop[0])
             ecs = data[start:pos]
-        yield marker, payload, ecs
-    raise JpegError("missing EOI marker")
+        yield marker, payload, ecs, payload_off
+    raise TruncatedJpegError("missing EOI marker", offset=n)
 
 
-def _parse_dqt(payload: bytes, qtables: dict[int, np.ndarray]) -> None:
+def _parse_dqt(payload: bytes, qtables: dict[int, np.ndarray],
+               base: int = 0) -> None:
     at = 0
     while at < len(payload):
         pq, tq = payload[at] >> 4, payload[at] & 0x0F
@@ -259,42 +332,51 @@ def _parse_dqt(payload: bytes, qtables: dict[int, np.ndarray]) -> None:
             vals = vals[:, 0].astype(np.int64) * 256 + vals[:, 1]
             at += 2 * n
         else:
-            raise JpegError(f"bad DQT precision {pq}")
+            raise MarkerError(f"bad DQT precision {pq}",
+                              offset=base + at - 1, marker=DQT)
         if vals.shape[0] != n:
-            raise JpegError("truncated DQT")
+            raise TruncatedJpegError("truncated DQT", offset=base + at,
+                                     marker=DQT)
         qtables[tq] = vals.astype(np.int64)
 
 
-def _parse_dht(payload: bytes, tables: dict[tuple[int, int], HuffmanTable]
-               ) -> None:
+def _parse_dht(payload: bytes, tables: dict[tuple[int, int], HuffmanTable],
+               base: int = 0) -> None:
     at = 0
     while at < len(payload):
         tc, th = payload[at] >> 4, payload[at] & 0x0F
         at += 1
         counts = np.frombuffer(payload[at:at + 16], np.uint8)
         if counts.shape[0] != 16:
-            raise JpegError("truncated DHT")
+            raise TruncatedJpegError("truncated DHT", offset=base + at,
+                                     marker=DHT)
         at += 16
         total = int(counts.sum())
         symbols = np.frombuffer(payload[at:at + total], np.uint8)
         if symbols.shape[0] != total:
-            raise JpegError("truncated DHT symbols")
+            raise TruncatedJpegError("truncated DHT symbols",
+                                     offset=base + at, marker=DHT)
         at += total
         tables[(tc, th)] = _cached_table(counts.tobytes(), symbols.tobytes())
 
 
-def _parse_sof(marker: int, payload: bytes):
+def _parse_sof(marker: int, payload: bytes, base: int = 0):
     if marker not in _SUPPORTED_SOF:
         kind = _SOF_KIND.get(marker, f"SOF{marker - 0xC0}")
-        raise UnsupportedJpegError(f"{kind} JPEG; {_UNSUPPORTED_HINT}")
+        raise UnsupportedJpegError(f"{kind} JPEG; {_UNSUPPORTED_HINT}",
+                                   marker=marker)
+    if len(payload) < 6:
+        raise TruncatedJpegError("truncated SOF", offset=base, marker=marker)
     precision = payload[0]
     if precision != 8:
-        raise UnsupportedJpegError(f"{precision}-bit precision (want 8)")
+        raise UnsupportedJpegError(f"{precision}-bit precision (want 8)",
+                                   offset=base, marker=marker)
     height = (payload[1] << 8) | payload[2]
     width = (payload[3] << 8) | payload[4]
     ncomp = payload[5]
     if height == 0 or width == 0:
-        raise UnsupportedJpegError("DNL-deferred dimensions not supported")
+        raise UnsupportedJpegError("DNL-deferred dimensions not supported",
+                                   offset=base, marker=marker)
     comps = []
     for i in range(ncomp):
         cid, hv, tq = payload[6 + 3 * i: 9 + 3 * i]
@@ -316,7 +398,8 @@ def _unstuff(ecs: np.ndarray) -> np.ndarray:
     drop[1:] = ff & (ecs[1:] == 0x00)
     bad = ff & (ecs[1:] != 0x00)
     if bad.any():
-        raise JpegError("unescaped marker inside entropy-coded segment")
+        raise EntropyError("unescaped marker inside entropy-coded segment",
+                           offset=int(np.nonzero(bad)[0][0]))
     return ecs[~drop]
 
 
@@ -352,20 +435,23 @@ class _BitReader:
 
     def read_code(self, table: HuffmanTable) -> int:
         if self.pos >= self.n:
-            raise JpegError("bit stream exhausted mid-block")
+            raise EntropyError("bit stream exhausted mid-block",
+                               offset=self.pos >> 3)
         packed = int(table.lut[self._peek16(self.pos)])
         if packed < 0:
-            raise JpegError("invalid Huffman code")
+            raise EntropyError("invalid Huffman code", offset=self.pos >> 3)
         self.pos += packed & 0xFF
         if self.pos > self.n:
-            raise JpegError("Huffman code ran past end of segment")
+            raise EntropyError("Huffman code ran past end of segment",
+                               offset=self.pos >> 3)
         return packed >> 8
 
     def receive(self, s: int) -> int:
         if s == 0:
             return 0
         if self.pos + s > self.n:
-            raise JpegError("value bits ran past end of segment")
+            raise EntropyError("value bits ran past end of segment",
+                               offset=self.pos >> 3)
         v = self._peek16(self.pos) >> (16 - s)
         self.pos += s
         return v
@@ -400,7 +486,7 @@ def _decode_block(br: _BitReader, dc: HuffmanTable, ac: HuffmanTable,
     """Decode one block's coefficients into ``out`` (64,); returns DC diff."""
     s = br.read_code(dc)
     if s > 15:
-        raise JpegError(f"bad DC size category {s}")
+        raise EntropyError(f"bad DC size category {s}", offset=br.pos >> 3)
     diff = _extend(br.receive(s), s)
     k = 1
     while k < dctlib.NFREQ:
@@ -413,7 +499,8 @@ def _decode_block(br: _BitReader, dc: HuffmanTable, ac: HuffmanTable,
             break             # EOB
         k += r
         if k >= dctlib.NFREQ:
-            raise JpegError("AC run past end of block")
+            raise EntropyError("AC run past end of block",
+                               offset=br.pos >> 3)
         out[k] = _extend(br.receive(s), s)
         k += 1
     return diff
@@ -509,51 +596,56 @@ def prepare_scan(data: bytes) -> Scan:
     restart_interval = 0
     scan = None
 
-    for marker, payload, ecs in parse_segments(data):
+    for marker, payload, ecs, off in parse_segments(data):
         if marker == DQT:
-            _parse_dqt(payload, qtables)
+            _parse_dqt(payload, qtables, base=off)
         elif marker == DHT:
-            _parse_dht(payload, huffman)
+            _parse_dht(payload, huffman, base=off)
         elif marker == DAC:
             raise UnsupportedJpegError(
                 "arithmetic-coded JPEG (DAC conditioning marker); "
-                + _UNSUPPORTED_HINT)
+                + _UNSUPPORTED_HINT, offset=off, marker=DAC)
         elif marker == DRI:
             restart_interval = _u16(payload, 0)
         elif marker in _SOF_ALL:
             if frame is not None:
-                raise UnsupportedJpegError("multi-frame (hierarchical) JPEG")
-            frame = _parse_sof(marker, payload)
+                raise UnsupportedJpegError("multi-frame (hierarchical) JPEG",
+                                           offset=off, marker=marker)
+            frame = _parse_sof(marker, payload, base=off)
         elif marker == SOS:
             if frame is None:
-                raise JpegError("SOS before SOF")
+                raise MarkerError("SOS before SOF", offset=off, marker=SOS)
             if scan is not None:
-                raise UnsupportedJpegError("multi-scan JPEG (progressive?)")
+                raise UnsupportedJpegError("multi-scan JPEG (progressive?)",
+                                           offset=off, marker=SOS)
             scan = (payload, ecs)
         # APPn / COM / others: skipped
 
     if frame is None or scan is None:
-        raise JpegError("no image data (missing SOF/SOS)")
+        raise MarkerError("no image data (missing SOF/SOS)")
     width, height, comps = frame
     payload, ecs = scan
     ns = payload[0]
     if ns != len(comps):
-        raise UnsupportedJpegError("partial-component scan")
+        raise UnsupportedJpegError("partial-component scan", marker=SOS)
     by_id = {c.ident: i for i, c in enumerate(comps)}
     order, tables = [], []
     for j in range(ns):
         cs, tdta = payload[1 + 2 * j: 3 + 2 * j]
         if cs not in by_id:
-            raise JpegError(f"scan references unknown component {cs}")
+            raise MarkerError(f"scan references unknown component {cs}",
+                              marker=SOS)
         order.append(by_id[cs])
         td, ta = tdta >> 4, tdta & 0x0F
         try:
             tables.append((huffman[(0, td)], huffman[(1, ta)]))
         except KeyError as e:
-            raise JpegError(f"scan references missing Huffman table {e}")
+            raise MarkerError(f"scan references missing Huffman table {e}",
+                              marker=SOS)
     for c in comps:
         if c.tq not in qtables:
-            raise JpegError(f"component quantization table {c.tq} missing")
+            raise MarkerError(
+                f"component quantization table {c.tq} missing", marker=SOS)
 
     hmax = max(c.h for c in comps)
     vmax = max(c.v for c in comps)
@@ -582,7 +674,7 @@ def prepare_scan(data: bytes) -> Scan:
         # surplus segment is still a genuine mismatch below.
         segments = segments[:-1]
     if len(segments) != expected:
-        raise JpegError(
+        raise MarkerError(
             f"restart markers disagree with DRI: {len(segments)} segments "
             f"for {n_mcus} MCUs at interval {restart_interval}")
     r = restart_interval or n_mcus

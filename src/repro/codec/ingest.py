@@ -21,7 +21,9 @@ from __future__ import annotations
 import atexit
 import multiprocessing
 import os
+import time
 from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
 from typing import Iterable, Iterator, NamedTuple
 
 import numpy as np
@@ -39,6 +41,7 @@ __all__ = [
     "ingest_workers",
     "pack_tiles",
     "merge_stats",
+    "pool_restarts",
     "shutdown_pool",
 ]
 
@@ -123,6 +126,22 @@ def ingest_workers() -> int:
 
 _POOL: ProcessPoolExecutor | None = None
 _POOL_SIZE = 0
+_POOL_RESTARTS = 0
+
+#: supervisor backoff: first respawn waits this long, doubling per
+#: attempt, capped at 1 s.  ``JPEG_POOL_MAX_RESTARTS`` bounds respawns
+#: per failed shard batch before the in-process last resort.
+POOL_BACKOFF_S = 0.05
+
+
+def pool_max_restarts() -> int:
+    return max(0, int(os.environ.get("JPEG_POOL_MAX_RESTARTS", "2")))
+
+
+def pool_restarts() -> int:
+    """How many times the supervisor has respawned a broken decode pool
+    (process-lifetime counter; exported into serving health snapshots)."""
+    return _POOL_RESTARTS
 
 
 def _get_pool(workers: int) -> ProcessPoolExecutor:
@@ -156,19 +175,74 @@ atexit.register(shutdown_pool)
 
 def _decode_shard(datas: list[bytes], quality: int,
                   grid: tuple[int, int] | None,
-                  channels: int | None) -> list[np.ndarray]:
+                  channels: int | None,
+                  isolate: bool = False) -> list[np.ndarray | Exception]:
     """One worker's share: lockstep-decode its images × segments jointly,
     then normalize.  Module-level so spawn workers can import it; raises
-    propagate through the future to the caller."""
-    scans = [bslib.prepare_scan(d) for d in datas]
-    return [nmlib.normalize_image(dec, quality=quality, grid=grid,
-                                  channels=channels)
-            for dec in lklib.decode_scans(scans)]
+    propagate through the future to the caller.
+
+    ``isolate=True`` contains per-image failures instead of failing the
+    shard: the joint lockstep decode is attempted first (healthy traffic
+    pays nothing), and only if it raises does the shard fall back to
+    per-image decode, returning the exception *in place of* the plane at
+    each failed index.  ``CodecError.__reduce__`` keeps offset/marker
+    context across the spawn-pool pickle boundary.
+    """
+    try:
+        scans = [bslib.prepare_scan(d) for d in datas]
+        return [nmlib.normalize_image(dec, quality=quality, grid=grid,
+                                      channels=channels)
+                for dec in lklib.decode_scans(scans)]
+    except Exception:
+        if not isolate:
+            raise
+    out: list[np.ndarray | Exception] = []
+    for d in datas:
+        try:
+            out.append(decode_bytes(d, quality=quality, grid=grid,
+                                    channels=channels))
+        except Exception as e:
+            out.append(e)
+    return out
+
+
+def _pool_shards(shards: list[list[bytes]], quality: int,
+                 grid: tuple[int, int] | None, channels: int | None,
+                 isolate: bool, workers: int
+                 ) -> list[tuple[int, list[np.ndarray | Exception]]] | None:
+    """Run shards on the shared pool under supervision.
+
+    A worker dying mid-decode (OOM-killed, segfault, SIGKILL) surfaces as
+    :class:`BrokenProcessPool` on every outstanding future.  The
+    supervisor tears the pool down, respawns it with capped exponential
+    backoff, and retries the whole shard batch up to
+    ``pool_max_restarts()`` times; ``None`` means supervision is
+    exhausted and the caller must decode in-process (last resort — slow
+    but alive).
+    """
+    global _POOL_RESTARTS
+    attempts = pool_max_restarts() + 1
+    for attempt in range(attempts):
+        pool = _get_pool(workers)
+        try:
+            # submit is inside the try: a worker killed *between* batches
+            # marks the pool broken and submit itself raises
+            futs = [(i, pool.submit(_decode_shard, shard, quality, grid,
+                                    channels, isolate))
+                    for i, shard in enumerate(shards) if shard]
+            return [(i, fut.result()) for i, fut in futs]
+        except BrokenProcessPool:
+            _POOL_RESTARTS += 1
+            shutdown_pool()
+            if attempt + 1 < attempts:
+                time.sleep(min(POOL_BACKOFF_S * (2 ** attempt), 1.0))
+    return None
 
 
 def _decode_planes(datas: list[bytes], *, quality: int,
                    grid: tuple[int, int] | None, channels: int | None,
-                   parallel: bool | None) -> list[np.ndarray]:
+                   parallel: bool | None, isolate: bool = False
+                   ) -> list[np.ndarray | Exception]:
     """Decode a batch to normalized planes, order-preserving.
 
     ``parallel=False``: strict sequential scalar reference.  ``True``:
@@ -176,22 +250,35 @@ def _decode_planes(datas: list[bytes], *, quality: int,
     (default): lockstep when the batch carries enough independent restart
     streams (``lockstep.LOCKSTEP_MIN_STREAMS``), scalar otherwise —
     always bit-exact either way.
+
+    ``isolate=True`` returns the per-image exception in place of the
+    plane at each failed index instead of raising.
     """
     if parallel is False:
-        return [decode_bytes(d, quality=quality, grid=grid,
-                             channels=channels) for d in datas]
+        out: list[np.ndarray | Exception] = []
+        for d in datas:
+            try:
+                out.append(decode_bytes(d, quality=quality, grid=grid,
+                                        channels=channels))
+            except Exception as e:
+                if not isolate:
+                    raise
+                out.append(e)
+        return out
     workers = ingest_workers()
     if workers > 1 and len(datas) >= 2:
-        pool = _get_pool(workers)
         shards = [datas[i::workers] for i in range(workers)]
-        futs = [(i, pool.submit(_decode_shard, shard, quality, grid,
-                                channels))
-                for i, shard in enumerate(shards) if shard]
-        planes: list[np.ndarray | None] = [None] * len(datas)
-        for i, fut in futs:
-            for j, plane in enumerate(fut.result()):
-                planes[i + j * workers] = plane
-        return planes  # type: ignore[return-value]
+        results = _pool_shards(shards, quality, grid, channels, isolate,
+                               workers)
+        if results is not None:
+            planes: list[np.ndarray | Exception | None] = [None] * len(datas)
+            for i, shard_planes in results:
+                for j, plane in enumerate(shard_planes):
+                    planes[i + j * workers] = plane
+            return planes  # type: ignore[return-value]
+        # supervision exhausted: fall through to the in-process path
+    if isolate:
+        return _decode_shard(datas, quality, grid, channels, True)
     scans = [bslib.prepare_scan(d) for d in datas]
     if parallel or lklib.count_streams(scans) >= lklib.LOCKSTEP_MIN_STREAMS:
         decs = lklib.decode_scans(scans)
@@ -205,8 +292,8 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
                  grid: tuple[int, int] | None = None, channels: int = 3,
                  pack_width: int | None = None,
                  with_stats: bool = True,
-                 parallel: bool | None = None
-                 ) -> tuple[np.ndarray, IngestStats | None]:
+                 parallel: bool | None = None,
+                 on_error: str = "raise"):
     """Decode + normalize a batch of JPEG byte strings.
 
     Returns ``(batch, stats)``: ``batch`` is ``(N, bh, bw, C, 64)``
@@ -221,13 +308,41 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
     result — batch, stats, and raised errors — is identical on every
     path, only wall clock differs.  Stats are computed here in the
     parent, so sharded decode cannot perturb them.
+
+    ``on_error="isolate"`` contains per-image decode failures instead of
+    failing the batch: the return becomes ``(batch, stats, errors)``
+    where ``errors`` maps the *original* index of each failed image to
+    its exception (typically a :class:`~repro.codec.CodecError`) and
+    ``batch`` stacks only the survivors, original order preserved.  With
+    every image failed, ``batch`` is the zero-length
+    ``(0, gh, gw, C, 64)`` (``grid`` required for a defined shape, else
+    ``(0,)``).  Healthy batches pay no overhead — the joint lockstep
+    decode runs exactly as in ``"raise"`` mode and per-image fallback
+    only triggers on failure.
     """
     datas = list(datas)
     if not datas:
         raise ValueError("empty ingest batch")
-    n_bytes = sum(len(d) for d in datas)
+    if on_error not in ("raise", "isolate"):
+        raise ValueError(
+            f"on_error must be 'raise' or 'isolate', got {on_error!r}")
+    isolate = on_error == "isolate"
     planes = _decode_planes(datas, quality=quality, grid=grid,
-                            channels=channels, parallel=parallel)
+                            channels=channels, parallel=parallel,
+                            isolate=isolate)
+    errors: dict[int, Exception] = {
+        i: p for i, p in enumerate(planes) if isinstance(p, Exception)}
+    planes = [p for p in planes if not isinstance(p, Exception)]
+    n_bytes = sum(len(d) for i, d in enumerate(datas) if i not in errors)
+    if not planes:
+        if grid is not None:
+            batch = np.zeros((0, grid[0], grid[1], channels or 3,
+                              dctlib.NFREQ), np.float32)
+            if pack_width is not None:
+                batch = pack_tiles(batch, pack_width)
+        else:
+            batch = np.zeros((0,), np.float32)
+        return batch, (merge_stats([]) if with_stats else None), errors
     shapes = {p.shape for p in planes}
     if len(shapes) > 1:
         raise ValueError(
@@ -245,6 +360,8 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
         )
     if pack_width is not None:
         batch = pack_tiles(batch, pack_width)
+    if isolate:
+        return batch, stats, errors
     return batch, stats
 
 

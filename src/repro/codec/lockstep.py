@@ -215,7 +215,10 @@ def decode_scans(scans: Sequence[bs.Scan]) -> list[bs.DecodedJpeg]:
         nacp = ~acp
         bad |= nacp & (sym > 15)    # DC size category > 15
 
-        p2 = p + (packed & 0xFF)
+        # invalid codes pack -1: their low byte reads as 255, which would
+        # drive the speculative peek2 past the stream's pad words — hold
+        # those lanes at p (they are flagged and discarded this iteration)
+        p2 = p + np.where(packed < 0, 0, packed & 0xFF)
         peek2 = (W[off_c + (p2 >> 3)] >> (8 - (p2 & 7))) & 0xFFFF
         ext = _EXT[(s << 16) + peek2]
         p3 = p2 + s

@@ -371,10 +371,64 @@ def _qos_request_source(args, cfg, seed: int):
         lambda step: np.asarray(next(it)["coefficients"])), "coefficients"
 
 
+def _chaos_faults(args, serving):
+    """Build the chaos run's deterministic fault plan (``--chaos``).
+
+    ``--chaos-rate`` of request indices get guaranteed-fail byte
+    corruption; one ingest-pool worker is SIGKILLed before the third
+    decode batch (driving the BrokenProcessPool supervisor); dispatches
+    2..2+``--chaos-exec-faults`` raise in the executor (driving
+    containment, retry exhaustion, and the breaker).
+    """
+    n_exec = getattr(args, "chaos_exec_faults", 2)
+    spec = serving.FaultSpec(
+        seed=getattr(args, "chaos_seed", 1234),
+        corrupt_rate=getattr(args, "chaos_rate", 0.2),
+        kill_worker_before_batch=(
+            3 if getattr(args, "chaos_kill_worker", True) else None),
+        executor_fail_batches=(2, 2 + n_exec) if n_exec else None,
+    )
+    # thresholds sized so the injected executor-fault burst visibly trips
+    # the breaker and the run closes it again: open after 2 consecutive
+    # service failures, half-open after 0.5 s, close on the first probe
+    policy = serving.BreakerPolicy(window=16, failure_rate=0.5,
+                                   min_samples=8, max_consecutive=2,
+                                   open_s=0.5, half_open_successes=1)
+    return serving.FaultInjector(spec), policy
+
+
+def _submit_retry(sched, serving, payload, kind, deadline_s,
+                  timeout_s: float = 60.0):
+    """Chaos-client submit: retry through open-breaker fast-rejects and
+    admission-control rejections (what a real client's backoff does)."""
+    t0 = time.time()
+    while True:
+        try:
+            r = sched.submit(payload, kind=kind, deadline_s=deadline_s)
+        except serving.ServiceUnavailable:
+            if time.time() - t0 > timeout_s:
+                raise
+            time.sleep(0.05)  # breaker open — wait for the half-open probe
+            continue
+        if r is not None:
+            return r
+        if time.time() - t0 > timeout_s:
+            return None
+        time.sleep(0.01)      # queue full — admission backpressure
+
+
 def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
     """Serve through the band-elastic runtime: saturating burst of
     single-image requests → admission control, per-batch tier selection,
-    degradation under overload, recovery on drain."""
+    degradation under overload, recovery on drain.
+
+    ``--chaos`` turns the burst into a fault drill: a deterministic
+    fraction of requests get corrupted bytes, one ingest worker is
+    killed mid-stream, and a window of dispatches fails in the executor
+    — the run then proves healthy requests still completed (with
+    bounded client retries through the breaker) while every fault
+    surfaced as a typed per-request error.
+    """
     from repro import serving
     from repro.core import plan as planlib
 
@@ -391,9 +445,23 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
     metrics = serving.ServeMetrics()
     payload_of, kind = _qos_request_source(args, cfg, args.seed)
 
+    chaos = getattr(args, "chaos", False)
+    faults, breaker_policy = None, None
+    if chaos:
+        if kind != "bytes":
+            raise ValueError("--chaos corrupts JPEG bytes; needs "
+                             "--ingest bytes")
+        faults, breaker_policy = _chaos_faults(args, serving)
+        print(f"[serve] chaos: corrupt_rate="
+              f"{faults.spec.corrupt_rate:g} seed={faults.spec.seed} "
+              f"kill_worker_before_batch="
+              f"{faults.spec.kill_worker_before_batch} "
+              f"executor_fail_batches={faults.spec.executor_fail_batches}")
+
     sched = serving.BandElasticScheduler(
         ladder, batch=args.batch, metrics=metrics, max_pending=max_pending,
-        grid=(n_blocks, n_blocks), channels=cfg.in_channels)
+        grid=(n_blocks, n_blocks), channels=cfg.in_channels,
+        breaker=breaker_policy, faults=faults)
     with sched:
         sched.warmup(kinds=(kind,))
         gs = sched.grid_engine.summary()
@@ -402,19 +470,51 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
               f"({gs['host_staging_bytes'] / 2**20:.1f} MiB pinned host "
               f"staging); post-warmup compiles will be reported")
         t0 = time.time()
-        requests = []
+        requests = []  # (request index, ServeRequest)
+        payloads = {}
         for i in range(total):
-            r = sched.submit(payload_of(i), kind=kind,
-                             deadline_s=deadline_s)
+            p = payload_of(i)
+            if faults is not None:
+                p = faults.corrupt(i, p)
+            payloads[i] = p
+            if chaos:
+                r = _submit_retry(sched, serving, p, kind, deadline_s)
+            else:
+                r = sched.submit(p, kind=kind, deadline_s=deadline_s)
             if r is not None:
-                requests.append(r)
+                requests.append((i, r))
         sched.drain()
+        if chaos:
+            # a real client retries service-level failures; requests the
+            # injected executor/ingest faults killed (healthy bytes, bad
+            # luck) are resubmitted until the fleet settles.  Corrupt
+            # requests are NOT retried — their typed codec errors are
+            # the success criterion, not a transient.
+            def _retryable(i, r):
+                e = r.error()
+                return (isinstance(e, serving.RequestFailed)
+                        and e.stage in ("executor", "ingest")
+                        and i not in faults.corrupted)
+
+            for _round in range(4):
+                retry = [k for k, (i, r) in enumerate(requests)
+                         if _retryable(i, r)]
+                if not retry:
+                    break
+                for k in retry:
+                    i, _ = requests[k]
+                    nr = _submit_retry(sched, serving, payloads[i], kind,
+                                       deadline_s)
+                    if nr is not None:
+                        requests[k] = (i, nr)
+                sched.drain()
         wall = time.time() - t0
+        health = sched.health()
 
     # top-tier fidelity probe: requests served at the *top* tier must
     # agree (top-1) with the uncompiled per-layer plan walk — the same
     # parity the fixed-band serve path is held to.
-    probe = [r for r in requests if r.tier == names[0]][: args.batch]
+    probe = [r for _, r in requests if r.tier == names[0]][: args.batch]
     agree = None
     if probe:
         if kind == "bytes":
@@ -437,12 +537,36 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
          "bands": sorted(set(t.bands.values()))} for t in ladder.tiers]
     qos_report["top1_agree_top_tier"] = agree
     served_n = len(requests)
+    completed = sum(1 for _, r in requests if r.tier is not None)
     out = {"arch": cfg.name, "images": served_n, "wall_s": wall,
            "images_per_s": served_n / max(wall, 1e-9),
-           "completed": served_n, "rejected": total - served_n,
+           "completed": completed, "rejected": total - served_n,
            "dispatch": plan.cfg.path, "ingest": kind,
            "latency_ms": qos_report["latency_ms"],
-           "qos": qos_report, "plan": plan_info}
+           "qos": qos_report, "plan": plan_info,
+           "health": health}
+    if chaos:
+        stages: dict[str, int] = {}
+        for _, r in requests:
+            e = r.error()
+            if isinstance(e, serving.RequestFailed):
+                stages[e.stage] = stages.get(e.stage, 0) + 1
+            elif e is not None:
+                stages[type(e).__name__] = stages.get(
+                    type(e).__name__, 0) + 1
+        healthy = [i for i in range(total) if i not in faults.corrupted]
+        out["chaos"] = {
+            "corrupted": len(faults.corrupted),
+            "corrupt_modes": {m: sum(1 for v in faults.corrupted.values()
+                                     if v == m)
+                              for m in set(faults.corrupted.values())},
+            "killed_worker_pid": faults.killed_pid,
+            "failed_by_stage": stages,
+            "healthy_total": len(healthy),
+            "healthy_completed": sum(
+                1 for i, r in requests
+                if i not in faults.corrupted and r.tier is not None),
+        }
     _emit_report(args, out)
     return out
 
@@ -674,6 +798,29 @@ def main() -> None:
                          "for --qos (default: accept the whole burst)")
     ap.add_argument("--report-out", default=None,
                     help="also write the serve report JSON to this path")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-drill the --qos byte stream: corrupt a "
+                         "fraction of requests (guaranteed-fail byte "
+                         "mutations), SIGKILL an ingest-pool worker "
+                         "mid-stream, and fail a window of executor "
+                         "dispatches — healthy requests must still "
+                         "complete; faults must surface as typed "
+                         "per-request errors (serving.faults)")
+    ap.add_argument("--chaos-rate", type=float, default=0.2,
+                    help="fraction of requests whose bytes are corrupted "
+                         "under --chaos (default 0.2)")
+    ap.add_argument("--chaos-seed", type=int, default=1234,
+                    help="fault-injection seed: corruption placement is "
+                         "deterministic in (seed, request index)")
+    ap.add_argument("--chaos-kill-worker", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="SIGKILL one ingest-pool worker before the third "
+                         "decode batch (exercises the BrokenProcessPool "
+                         "supervisor; needs JPEG_INGEST_WORKERS > 1)")
+    ap.add_argument("--chaos-exec-faults", type=int, default=2,
+                    help="how many worker dispatches raise injected "
+                         "executor faults (window starts at dispatch 2; "
+                         "sized to trip the chaos breaker policy)")
     ap.add_argument("--compiled", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="serve the compiled fused-block schedule "

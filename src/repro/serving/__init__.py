@@ -20,7 +20,14 @@ serving subsystem on top of the convert-once engine (``core.plan``):
   deadline-slack signals pick the tier per batch, degrading bands under
   overload and recovering (with hysteresis) as the queue drains;
 * :mod:`repro.serving.metrics` — per-request latency percentiles,
-  per-tier throughput, tier-switch events, ingest occupancy.
+  per-tier throughput, tier-switch events, ingest occupancy, failure
+  counters per reason, breaker state timeline;
+* :mod:`repro.serving.breaker` — a circuit breaker over service-level
+  failures: fast-rejects (``ServiceUnavailable``) while the backend is
+  evidently unhealthy, half-opens on a timer;
+* :mod:`repro.serving.faults` — deterministic, seedable fault injection
+  (corrupt bytes, worker kills, executor faults) driving the chaos
+  suite; production runs never construct it.
 
 ``launch/serve.py`` is a thin CLI over this runtime (``--qos``,
 ``--tiers``, ``--deadline-ms``); ``benchmarks/fig5_throughput.py``'s
@@ -45,13 +52,17 @@ from repro.serving.ladder import (
     load_ladder,
     save_ladder,
 )
+from repro.serving.breaker import BreakerPolicy, CircuitBreaker
+from repro.serving.faults import FaultInjector, FaultSpec, InjectedFault
 from repro.serving.metrics import ServeMetrics, percentiles
 from repro.serving.qos import QosPolicy, TierSelector
 from repro.serving.scheduler import (
     BandElasticScheduler,
     DeadlineExceeded,
+    RequestFailed,
     SchedulerClosed,
     ServeRequest,
+    ServiceUnavailable,
 )
 
 __all__ = [
@@ -75,7 +86,14 @@ __all__ = [
     "QosPolicy",
     "TierSelector",
     "BandElasticScheduler",
+    "BreakerPolicy",
+    "CircuitBreaker",
     "DeadlineExceeded",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+    "RequestFailed",
     "SchedulerClosed",
     "ServeRequest",
+    "ServiceUnavailable",
 ]

@@ -1,0 +1,176 @@
+"""Deterministic fault injection for the serving stack (test-only hooks).
+
+The chaos suite and the CI ``chaos-smoke`` job need *reproducible*
+disasters: the same seed must corrupt the same requests the same way on
+every run, or a green build proves nothing.  Everything here is pure with
+respect to ``(seed, request index)`` — each decision draws from
+``np.random.default_rng((seed, index))``, so fault placement is
+insensitive to arrival order, thread timing, and batch composition.
+
+Three injection points, wired through :class:`repro.serving.scheduler.
+BandElasticScheduler`'s ``faults=`` hook (``None`` in production — the
+hot path pays one attribute check):
+
+- **corrupt(i, data)** — client-side byte mutation before ``submit()``.
+  The default modes are *guaranteed-fail*: truncation (the EOI marker is
+  gone, so ``parse_segments`` must raise) and unescaped-marker injection
+  into the entropy-coded segment (``_unstuff`` must raise).  Random
+  bit-flips are also available but JPEG carries no checksum, so a flip
+  may decode silently — fuzz tests use them, parity-asserting chaos
+  tests don't.
+- **on_ingest(reqs)** — runs on the scheduler's ingest thread before a
+  batch decodes: optional decode delay (deadline/backpressure chaos) and
+  a one-shot SIGKILL of a live ingest-pool worker (drives the
+  ``BrokenProcessPool`` supervision path).
+- **on_execute(seq, reqs)** — runs in the worker loop before dispatch
+  ``seq``: raises :class:`InjectedFault` inside a configured dispatch
+  window, driving executor-failure containment, retry, and the breaker.
+"""
+from __future__ import annotations
+
+import os
+import signal
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.codec import ingest as ingest_mod
+
+__all__ = ["FaultSpec", "FaultInjector", "InjectedFault",
+           "kill_one_ingest_worker"]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the executor-fault hook; distinguishable from real bugs."""
+
+
+def kill_one_ingest_worker() -> int | None:
+    """SIGKILL one live worker of the shared ingest pool, if any.
+
+    Returns the pid killed, or ``None`` when no pool (or no live worker)
+    exists.  The next shard batch submitted to the pool then surfaces
+    ``BrokenProcessPool`` and exercises the supervisor's
+    respawn-with-backoff path.
+    """
+    pool = ingest_mod._POOL
+    if pool is None:
+        return None
+    procs = list(getattr(pool, "_processes", {}).values())
+    for p in procs:
+        if p.is_alive():
+            os.kill(p.pid, signal.SIGKILL)
+            return p.pid
+    return None
+
+
+def _truncate(data: bytes, rng: np.random.Generator) -> bytes:
+    """Cut the file at 10–80% of its length: EOI is gone, parse fails."""
+    cut = max(2, int(len(data) * rng.uniform(0.1, 0.8)))
+    return data[:cut]
+
+
+def _inject_marker(data: bytes, rng: np.random.Generator) -> bytes:
+    """Write an unescaped marker into the entropy-coded data.
+
+    ``0xFF 0xC7`` inside an ECS is structurally illegal (not a stuffed
+    zero, not an RST), so either the SOS byte-scan mis-segments or
+    ``_unstuff`` raises — always a :class:`~repro.codec.CodecError`,
+    never a silent wrong decode.
+    """
+    arr = bytearray(data)
+    # land inside the entropy-coded data: right after the SOS header
+    # (overwrites inside DQT/DHT payloads can decode silently — they just
+    # shift table values — so aiming by file fraction is not enough)
+    sos = data.find(b"\xff\xda")
+    if sos < 0 or sos + 4 > len(data):
+        return _truncate(data, rng)
+    lo = sos + 2 + int.from_bytes(data[sos + 2:sos + 4], "big")
+    hi = len(arr) - 4
+    if hi <= lo:
+        return _truncate(data, rng)
+    at = int(rng.integers(lo, hi))
+    arr[at:at + 2] = b"\xff\xc7"
+    return bytes(arr)
+
+
+def _bitflip(data: bytes, rng: np.random.Generator) -> bytes:
+    """Flip one random bit.  May decode silently (JPEG has no checksum)."""
+    arr = bytearray(data)
+    at = int(rng.integers(2, len(arr) - 2))
+    arr[at] ^= 1 << int(rng.integers(0, 8))
+    return bytes(arr)
+
+
+_MUTATORS = {"truncate": _truncate, "marker": _inject_marker,
+             "bitflip": _bitflip}
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """What to break, and when — all deterministic in ``seed``.
+
+    ``corrupt_rate`` — fraction of request indices whose bytes are
+    mutated by :meth:`FaultInjector.corrupt`; the mode is drawn uniformly
+    from ``corrupt_modes``.  ``decode_delay_s`` stalls the ingest thread
+    before every batch decode.  ``kill_worker_before_batch`` SIGKILLs one
+    ingest-pool worker right before that many ingest batches have been
+    seen (one-shot).  ``executor_fail_batches`` is a half-open
+    ``[lo, hi)`` window of worker dispatch sequence numbers in which
+    ``on_execute`` raises :class:`InjectedFault`.
+    """
+
+    seed: int = 0
+    corrupt_rate: float = 0.0
+    corrupt_modes: Sequence[str] = ("truncate", "marker")
+    decode_delay_s: float = 0.0
+    kill_worker_before_batch: int | None = None
+    executor_fail_batches: tuple[int, int] | None = None
+
+
+@dataclass
+class FaultInjector:
+    """Stateful driver of a :class:`FaultSpec` (one per chaos run)."""
+
+    spec: FaultSpec
+    killed_pid: int | None = None
+    corrupted: dict[int, str] = field(default_factory=dict)
+    _ingest_batches: int = 0
+
+    def corrupt(self, index: int, data: bytes) -> bytes:
+        """Maybe mutate request ``index``'s bytes (pure in (seed, index)).
+
+        Records the chosen mode in ``corrupted[index]`` so the harness
+        knows exactly which requests must fail.
+        """
+        spec = self.spec
+        if spec.corrupt_rate <= 0.0:
+            return data
+        rng = np.random.default_rng((spec.seed, index))
+        if rng.random() >= spec.corrupt_rate:
+            return data
+        mode = str(rng.choice(list(spec.corrupt_modes)))
+        self.corrupted[index] = mode
+        return _MUTATORS[mode](data, rng)
+
+    def on_ingest(self, reqs) -> None:
+        """Scheduler ingest-thread hook, called before each batch decode."""
+        spec = self.spec
+        self._ingest_batches += 1
+        if (spec.kill_worker_before_batch is not None
+                and self.killed_pid is None
+                and self._ingest_batches >= spec.kill_worker_before_batch):
+            self.killed_pid = kill_one_ingest_worker()
+        if spec.decode_delay_s > 0.0:
+            import time
+            time.sleep(spec.decode_delay_s)
+
+    def on_execute(self, seq: int, reqs) -> None:
+        """Worker-loop hook, called with the dispatch sequence number
+        before each batch executes.  Raises inside the configured window
+        (every retry too — an injected fault is not transient, so it
+        deterministically exhausts the retry budget and surfaces)."""
+        win = self.spec.executor_fail_batches
+        if win is not None and win[0] <= seq < win[1]:
+            raise InjectedFault(
+                f"injected executor fault at dispatch {seq}")

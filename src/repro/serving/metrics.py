@@ -67,6 +67,9 @@ class ServeMetrics:
         self._compiles_total = 0
         self._compiles_post_warmup = 0
         self._compiled_cells: list[dict[str, Any]] = []
+        self._failures: dict[str, int] = {}
+        self._pool_restarts = 0
+        self._breaker_events: list[dict[str, Any]] = []
 
     # ------------------------------------------------------------- requests
     def record_request(self, latency_s: float, *, tier: str | None = None,
@@ -146,6 +149,38 @@ class ServeMetrics:
                                    "from": from_tier, "to": to_tier,
                                    "reason": reason})
 
+    # ------------------------------------------------------------- failures
+    def record_failure(self, reason: str, n: int = 1) -> None:
+        """One failed request, keyed by reason — ``codec`` (bad input
+        bytes), ``deadline``, ``executor``, ``ingest`` (decode
+        infrastructure), ``rejected-open-breaker`` (fast-reject)."""
+        with self._lock:
+            self._failures[reason] = self._failures.get(reason, 0) + n
+
+    def record_pool_restarts(self, n: int = 1) -> None:
+        """The ingest-pool supervisor respawned a broken worker pool."""
+        with self._lock:
+            self._pool_restarts += n
+
+    def record_breaker(self, frm: str, to: str, reason: str) -> None:
+        """One circuit-breaker state transition (the state timeline)."""
+        with self._lock:
+            self._breaker_events.append(
+                {"seq": len(self._breaker_events), "from": frm, "to": to,
+                 "reason": reason})
+
+    def failures_total(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self._failures)
+
+    def pool_restarts(self) -> int:
+        with self._lock:
+            return self._pool_restarts
+
+    def breaker_timeline(self) -> list[dict[str, Any]]:
+        with self._lock:
+            return list(self._breaker_events)
+
     def record_ingest(self, stats: Any) -> None:
         """Accumulate a ``codec.ingest.IngestStats`` from one byte batch."""
         if stats is not None:
@@ -195,6 +230,9 @@ class ServeMetrics:
                 "latency_ms": percentiles(self._latencies),
                 "per_tier": per_tier,
                 "tier_switches": list(self._switches),
+                "failures_total": dict(self._failures),
+                "pool_restarts": self._pool_restarts,
+                "breaker_timeline": list(self._breaker_events),
             }
             if self._compiles_post_warmup:
                 # name the offending cells so a CI zero-compile assertion

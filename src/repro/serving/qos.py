@@ -177,6 +177,17 @@ class TierSelector:
             self._under = 0
         return self.tier
 
+    def note_failure(self) -> None:
+        """A batch at the current tier failed (executor fault, not load).
+
+        Resets both hysteresis streaks: a failed batch produced neither a
+        latency observation nor evidence about queue pressure, so letting
+        its ``select`` vote stand would let a fault burst walk the ladder
+        on garbage signal.
+        """
+        self._over = 0
+        self._under = 0
+
     def _switch(self, to: int, reason: str) -> None:
         frm = self.tier
         self.tier = to

@@ -34,9 +34,25 @@ runtime object:
 
 Lifecycle mirrors the ``data.pipeline.prefetch`` contract: the worker
 thread is owned by the scheduler — :meth:`close` (or leaving the
-``with`` block) joins it, draining queued requests by default; a crash in
-the worker fails every pending and future request with the original
-exception instead of hanging waiters, and :meth:`close` re-raises it.
+``with`` block) joins it, draining queued requests by default.
+
+**Fault isolation** (the robustness layer): failures are contained at
+the smallest scope that owns them.  A malformed JPEG fails *that*
+request with :class:`RequestFailed` (stage ``"codec"``, the
+``codec.CodecError`` on ``__cause__``) — batch-mates decode and serve
+normally via ``ingest_batch(..., on_error="isolate")``.  An executor
+exception gets one bounded retry, then fails only its batch (stage
+``"executor"``) — the scheduler keeps serving.  Ingest-infrastructure
+failures fail only the batch being decoded (stage ``"ingest"``); the
+codec's pool supervisor respawns dead workers underneath.  Service-level
+failures feed a :class:`~repro.serving.breaker.CircuitBreaker` that
+fast-rejects new submissions with :class:`ServiceUnavailable` while the
+service is evidently unhealthy (per-request codec errors never trip it —
+corrupt *input* is not an unhealthy *service*).  ``_fail_all`` — the old
+fail-deadly path — is reserved for genuinely unrecoverable states
+(``BaseException`` escaping a loop); :meth:`close` re-raises it.
+:meth:`health` snapshots breaker state, failure counters, pool restarts,
+and queue depths at any time.
 """
 from __future__ import annotations
 
@@ -49,13 +65,14 @@ from typing import Any
 import numpy as np
 import jax
 
+from repro.serving.breaker import BreakerPolicy, CircuitBreaker
 from repro.serving.grid import PlanGrid
 from repro.serving.ladder import PlanLadder
 from repro.serving.metrics import ServeMetrics
 from repro.serving.qos import QosPolicy, TierSelector
 
-__all__ = ["DeadlineExceeded", "SchedulerClosed", "ServeRequest",
-           "BandElasticScheduler"]
+__all__ = ["DeadlineExceeded", "RequestFailed", "SchedulerClosed",
+           "ServeRequest", "ServiceUnavailable", "BandElasticScheduler"]
 
 KINDS = ("coefficients", "bytes")
 
@@ -67,6 +84,28 @@ class SchedulerClosed(RuntimeError):
 class DeadlineExceeded(RuntimeError):
     """The request's deadline passed before it was dispatched; it was
     shed at dequeue instead of wasting a batch slot."""
+
+
+class RequestFailed(RuntimeError):
+    """One request failed; the scheduler is still serving.
+
+    ``stage`` names where it died — ``"codec"`` (this request's bytes
+    are malformed; the underlying :class:`~repro.codec.CodecError` is on
+    ``__cause__``), ``"executor"`` (the batch's compiled executable
+    raised after the retry budget), ``"ingest"`` (decode infrastructure
+    failed under the batch).
+    """
+
+    def __init__(self, stage: str, rid: int, cause: BaseException):
+        super().__init__(f"request {rid} failed at {stage}: {cause}")
+        self.stage = stage
+        self.rid = rid
+        self.__cause__ = cause
+
+
+class ServiceUnavailable(RuntimeError):
+    """Fast-reject: the circuit breaker is open.  Retry after backoff —
+    the breaker half-opens on its own timer."""
 
 
 class ServeRequest:
@@ -96,6 +135,11 @@ class ServeRequest:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def error(self) -> BaseException | None:
+        """The failure outcome, if the request is done and failed —
+        without raising (chaos harnesses inspect fleets of requests)."""
+        return self._error if self._event.is_set() else None
+
     def result(self, timeout: float | None = None) -> np.ndarray:
         if not self._event.wait(timeout):
             raise TimeoutError(f"request {self.rid} still pending")
@@ -104,12 +148,16 @@ class ServeRequest:
         return self._result
 
     def _complete(self, logits: np.ndarray, tier: str) -> None:
+        if self._event.is_set():
+            return  # first outcome wins (containment paths may race)
         self.tier = tier
         self.latency_s = time.monotonic() - self.submitted
         self._result = logits
         self._event.set()
 
     def _fail(self, err: BaseException) -> None:
+        if self._event.is_set():
+            return  # already resolved; keep the first outcome
         self._error = err
         self._event.set()
 
@@ -146,9 +194,14 @@ class BandElasticScheduler:
                  channels: int = 3,
                  executor: str | None = "auto",
                  buckets=None,
-                 donate: bool = True):
+                 donate: bool = True,
+                 breaker: CircuitBreaker | BreakerPolicy | None = None,
+                 faults=None,
+                 executor_retries: int = 1):
         if batch < 1:
             raise ValueError("batch must be >= 1")
+        if executor_retries < 0:
+            raise ValueError("executor_retries must be >= 0")
         if executor == "auto":
             # off-TPU, only the packed-GEMM lowering is band-elastic; on
             # TPU the per-block megakernel path already is
@@ -162,6 +215,20 @@ class BandElasticScheduler:
         self.channels = channels
         self.quality = ladder.base.spec.quality
         self._warmed = False
+        # service-level failure breaker (codec errors never feed it); a
+        # prebuilt CircuitBreaker is taken as-is, a BreakerPolicy (or
+        # None = defaults) builds one wired into the metrics timeline
+        if isinstance(breaker, CircuitBreaker):
+            self.breaker = breaker
+        else:
+            self.breaker = CircuitBreaker(
+                breaker, on_transition=self.metrics.record_breaker)
+        self.faults = faults          # FaultInjector | None (tests only)
+        self.executor_retries = executor_retries
+        from repro.codec import ingest as _ingestlib
+
+        self._pool_seen = _ingestlib.pool_restarts()
+        self._dispatch_seq = 0
 
         # the (batch bucket × band tier) executor grid: one column per
         # *distinct* compiled schedule (shared tiers reuse cells and
@@ -209,8 +276,9 @@ class BandElasticScheduler:
     def submit(self, payload: Any, *, kind: str = "coefficients",
                deadline_s: float | None = None) -> ServeRequest | None:
         """Enqueue one request; returns None when admission control
-        rejects it (queue at ``max_pending``) and re-raises the worker's
-        failure when the scheduler has died."""
+        rejects it (queue at ``max_pending``), raises
+        :class:`ServiceUnavailable` while the circuit breaker is open,
+        and re-raises the worker's failure when the scheduler has died."""
         if kind not in KINDS:
             raise ValueError(f"unknown request kind {kind!r} "
                              f"(expected one of {KINDS})")
@@ -221,6 +289,10 @@ class BandElasticScheduler:
                 raise self._error
             if self._stop:
                 raise SchedulerClosed("scheduler is closed")
+            if not self.breaker.allow():
+                self.metrics.record_failure("rejected-open-breaker")
+                raise ServiceUnavailable(
+                    "circuit breaker open — service unhealthy, retry later")
             if self._pending_locked() >= self.max_pending:
                 self.metrics.record_rejected()
                 return None
@@ -248,6 +320,27 @@ class BandElasticScheduler:
     def images_served(self) -> int:
         with self._lock:
             return self._images
+
+    def health(self) -> dict:
+        """Point-in-time service health: breaker state, failure counters
+        per reason, ingest-pool restarts, queue depths, thread liveness.
+        Exported through the serve report (``--report-out``)."""
+        with self._lock:
+            queues = {k: len(q) for k, q in self._queues.items()}
+            queues["decoded_batches"] = len(self._decoded)
+            queues["decoding"] = self._ingesting
+            in_flight = self._in_flight
+            dead = self._error is not None
+        return {
+            "breaker": self.breaker.snapshot(),
+            "failures_total": self.metrics.failures_total(),
+            "pool_restarts": self.metrics.pool_restarts(),
+            "queues": queues,
+            "in_flight": in_flight,
+            "worker_alive": self._worker.is_alive(),
+            "ingest_alive": self._ingest_thread.is_alive(),
+            "dead": dead,
+        }
 
     # ------------------------------------------------------------ lifecycle
     def _note_compile(self, cell: str) -> None:
@@ -323,6 +416,14 @@ class BandElasticScheduler:
         the worker — packing to the chosen tier's stem width is a cheap
         slice at execute time.  Runs the codec's parallel path; decode
         wall is measured here and reported separately from device wall.
+
+        Failure containment: decode runs with ``on_error="isolate"`` —
+        each malformed image fails its own request (stage ``"codec"``)
+        and the survivors serve normally.  An infrastructure exception
+        under the batch (the pool supervisor already retried underneath)
+        fails only that batch (stage ``"ingest"``), feeds the breaker,
+        and the thread keeps draining.  Only ``BaseException`` poisons
+        the scheduler.
         """
         from repro.codec import ingest as ingestlib
 
@@ -356,11 +457,37 @@ class BandElasticScheduler:
                         self._idle.notify_all()
                     continue
                 t0 = time.monotonic()
-                coef, stats = ingestlib.ingest_batch(
-                    [r.payload for r in reqs], quality=self.quality,
-                    grid=self.grid, channels=self.channels)
+                try:
+                    if self.faults is not None:
+                        self.faults.on_ingest(reqs)
+                    coef, stats, errors = ingestlib.ingest_batch(
+                        [r.payload for r in reqs], quality=self.quality,
+                        grid=self.grid, channels=self.channels,
+                        on_error="isolate")
+                except Exception as e:
+                    # decode infrastructure died under the whole batch —
+                    # fail these requests, keep the thread serving
+                    self._note_pool_restarts(ingestlib)
+                    for r in reqs:
+                        r._fail(RequestFailed("ingest", r.rid, e))
+                    self.metrics.record_failure("ingest", len(reqs))
+                    self.breaker.record_failure("ingest")
+                    with self._lock:
+                        self._ingesting = 0
+                        reqs = []
+                    with self._idle:
+                        self._idle.notify_all()
+                    continue
                 wall = time.monotonic() - t0
+                self._note_pool_restarts(ingestlib)
                 self.metrics.record_ingest(stats)
+                if errors:
+                    for i, err in errors.items():
+                        r = reqs[i]
+                        r._fail(RequestFailed("codec", r.rid, err))
+                    self.metrics.record_failure("codec", len(errors))
+                    reqs = [r for i, r in enumerate(reqs)
+                            if i not in errors]
                 with self._lock:
                     if self._stop and not self._drain:
                         for r in reqs:
@@ -368,11 +495,22 @@ class BandElasticScheduler:
                                 "scheduler closed before completion"))
                         self._ingesting = 0
                         return
-                    self._decoded.append(
-                        (reqs, np.asarray(coef, np.float32), wall))
+                    if self._error is not None:
+                        # the worker died while we were decoding: these
+                        # requests are invisible to _fail_all — fail them
+                        # here so close() never strands a waiter
+                        for r in reqs:
+                            r._fail(self._error)
+                        self._ingesting = 0
+                        return
+                    if reqs:
+                        self._decoded.append(
+                            (reqs, np.asarray(coef, np.float32), wall))
                     self._ingesting = 0
                     reqs = []
                     self._work.notify_all()
+                with self._idle:
+                    self._idle.notify_all()
         except BaseException as e:  # noqa: BLE001 — re-raised at waiters
             for r in reqs:
                 r._fail(e)
@@ -380,14 +518,33 @@ class BandElasticScheduler:
                 self._ingesting = 0
             self._fail_all(e)
         finally:
+            leftover: list[ServeRequest] = []
             with self._lock:
                 self._ingest_alive = False
+                if self._error is not None:
+                    # decoded batches appended after (or never seen by)
+                    # _fail_all would strand their waiters — drain them
+                    leftover = [r for e in self._decoded for r in e[0]]
+                    self._decoded.clear()
+                err = self._error
                 self._work.notify_all()
+            for r in leftover:
+                r._fail(err)
+
+    def _note_pool_restarts(self, ingestlib) -> None:
+        """Fold the codec pool supervisor's respawn count into metrics
+        (delta since construction / last observation)."""
+        now = ingestlib.pool_restarts()
+        delta = now - self._pool_seen
+        if delta > 0:
+            self._pool_seen = now
+            self.metrics.record_pool_restarts(delta)
 
     def _shed(self, shed: list[ServeRequest]) -> None:
         if not shed:
             return
         self.metrics.record_deadline_shed(len(shed))
+        self.metrics.record_failure("deadline", len(shed))
         for r in shed:
             r._fail(DeadlineExceeded(
                 f"request {r.rid} expired before dispatch"))
@@ -472,12 +629,35 @@ class BandElasticScheduler:
                         self._in_flight = 0
                         self._idle.notify_all()
                     continue
-                try:
-                    self._execute(reqs, tier_ix, depth, decoded)
-                except BaseException as e:
-                    for r in reqs:  # the in-flight batch left the queue —
-                        r._fail(e)  # _fail_all below can't see it
-                    raise
+                seq = self._dispatch_seq
+                self._dispatch_seq += 1
+                err: Exception | None = None
+                for _attempt in range(self.executor_retries + 1):
+                    try:
+                        if self.faults is not None:
+                            self.faults.on_execute(seq, reqs)
+                        self._execute(reqs, tier_ix, depth, decoded)
+                        err = None
+                        break
+                    except Exception as e:  # transient? bounded retry
+                        err = e
+                    except BaseException as e:
+                        for r in reqs:  # the in-flight batch left the
+                            r._fail(e)  # queue — _fail_all can't see it
+                        raise
+                if err is None:
+                    self.breaker.record_success()
+                else:
+                    # retry budget exhausted: fail only this batch — the
+                    # scheduler survives, the breaker accumulates
+                    for r in reqs:
+                        r._fail(RequestFailed("executor", r.rid, err))
+                    self.metrics.record_failure("executor", len(reqs))
+                    self.breaker.record_failure("executor")
+                    self.selector.note_failure()
+                    with self._idle:
+                        self._in_flight = 0
+                        self._idle.notify_all()
         except BaseException as e:  # noqa: BLE001 — re-raised at waiters
             self._fail_all(e)
             return

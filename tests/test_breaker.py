@@ -1,0 +1,160 @@
+"""Circuit-breaker unit contracts (``repro.serving.breaker``).
+
+Driven entirely on a fake clock so every timer transition is
+deterministic: open on consecutive failures or rolling failure rate,
+refuse while open, half-open when the timer expires, close on probe
+successes, re-open on a probe failure.
+"""
+import pytest
+
+from repro.serving.breaker import BreakerPolicy, CircuitBreaker
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _breaker(clock, events=None, **kw):
+    policy = BreakerPolicy(**kw)
+    on_transition = None
+    if events is not None:
+        on_transition = lambda f, t, r: events.append((f, t, r))  # noqa: E731
+    return CircuitBreaker(policy, clock=clock, on_transition=on_transition)
+
+
+def test_opens_on_consecutive_failures():
+    clock, events = FakeClock(), []
+    b = _breaker(clock, events, max_consecutive=3, min_samples=100)
+    b.record_failure("executor")
+    b.record_failure("executor")
+    assert b.state == "closed" and b.allow()
+    b.record_failure("executor")
+    assert b.state == "open"
+    assert not b.allow()
+    assert events == [("closed", "open", "executor")]
+
+
+def test_success_resets_consecutive_streak():
+    clock = FakeClock()
+    b = _breaker(clock, max_consecutive=3, min_samples=100)
+    for _ in range(5):
+        b.record_failure("executor")
+        b.record_failure("executor")
+        b.record_success()  # streak broken before the threshold
+    assert b.state == "closed"
+
+
+def test_opens_on_rolling_failure_rate():
+    clock = FakeClock()
+    b = _breaker(clock, window=10, failure_rate=0.5, min_samples=8,
+                 max_consecutive=1000)
+    # alternate so the consecutive streak never fires; the window rate does
+    outcomes = [True, False] * 3 + [True, False, True]
+    for fail in outcomes[:-1]:
+        b.record_failure("x") if fail else b.record_success()
+        assert b.state == "closed"
+    b.record_failure("x")  # 5 failures / 9 samples >= 0.5, samples >= 8
+    assert b.state == "open"
+
+
+def test_rate_needs_min_samples():
+    clock = FakeClock()
+    b = _breaker(clock, window=10, failure_rate=0.5, min_samples=8,
+                 max_consecutive=1000)
+    for _ in range(7):  # 100% failure but under min_samples... no, 7 < 8
+        b.record_failure("x")
+    # max_consecutive=1000 keeps the streak path out; 7 samples < 8
+    assert b.state == "closed"
+
+
+def test_half_open_after_timer_and_close_on_probes():
+    clock, events = FakeClock(), []
+    b = _breaker(clock, events, max_consecutive=2, min_samples=100,
+                 open_s=1.0, half_open_successes=2)
+    b.record_failure("executor")
+    b.record_failure("executor")
+    assert b.state == "open"
+    clock.advance(0.5)
+    assert not b.allow()          # timer not expired
+    clock.advance(0.6)
+    assert b.allow()              # flips to half_open, admits the probe
+    assert b.state == "half_open"
+    b.record_success()
+    assert b.state == "half_open"  # one probe success is not enough
+    b.record_success()
+    assert b.state == "closed"
+    assert [(f, t) for f, t, _ in events] == [
+        ("closed", "open"), ("open", "half_open"), ("half_open", "closed")]
+
+
+def test_half_open_failure_reopens():
+    clock = FakeClock()
+    b = _breaker(clock, max_consecutive=2, min_samples=100, open_s=1.0)
+    b.record_failure("executor")
+    b.record_failure("executor")
+    clock.advance(1.0)
+    assert b.allow() and b.state == "half_open"
+    b.record_failure("executor")
+    assert b.state == "open"
+    assert not b.allow()
+    clock.advance(1.0)
+    assert b.allow() and b.state == "half_open"  # timer restarts each open
+
+
+def test_close_clears_window():
+    clock = FakeClock()
+    b = _breaker(clock, window=8, failure_rate=0.5, min_samples=4,
+                 max_consecutive=2, open_s=1.0, half_open_successes=1)
+    b.record_failure("x")
+    b.record_failure("x")
+    clock.advance(1.0)
+    assert b.allow()
+    b.record_success()
+    assert b.state == "closed"
+    snap = b.snapshot()
+    # the old failure window must not instantly re-trip the fresh close
+    assert snap["window_samples"] == 0
+    assert snap["consecutive_failures"] == 0
+
+
+def test_snapshot_fields():
+    clock = FakeClock()
+    b = _breaker(clock, max_consecutive=5, min_samples=2, window=4)
+    b.record_failure("ingest")
+    b.record_success()
+    snap = b.snapshot()
+    assert snap["state"] == "closed"
+    assert snap["window_samples"] == 2
+    assert snap["window_failure_rate"] == pytest.approx(0.5)
+    assert snap["consecutive_failures"] == 0
+    assert snap["last_failure_reason"] == "ingest"
+
+
+def test_thread_safety_smoke():
+    import threading
+
+    clock = FakeClock()
+    b = _breaker(clock, window=32, max_consecutive=10_000,
+                 min_samples=10_000)
+
+    def pound(fail: bool):
+        for _ in range(500):
+            b.record_failure("x") if fail else b.record_success()
+            b.allow()
+            b.snapshot()
+
+    ts = [threading.Thread(target=pound, args=(i % 2 == 0,))
+          for i in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert b.state == "closed"
+    assert b.snapshot()["window_samples"] == 32

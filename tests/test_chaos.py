@@ -1,0 +1,389 @@
+"""Fault-isolation chaos suite (``repro.serving`` + codec isolation).
+
+Contracts under injected disaster:
+
+* a malformed request fails *alone* — typed ``RequestFailed`` at stage
+  ``"codec"`` with the ``CodecError`` cause attached — while every
+  healthy request in the same batch serves with unchanged predictions;
+* an executor fault fails only its batch after the bounded retry, and
+  the scheduler keeps serving;
+* the circuit breaker walks closed → open (fast-rejecting with
+  ``ServiceUnavailable``) → half-open → closed, all visible in the
+  metrics timeline;
+* killing an ingest-pool worker surfaces as a supervised respawn
+  (``pool_restarts``), never as a failed or hung request;
+* a dying worker can no longer deadlock ``close()`` against an ingest
+  thread blocked on the bounded decoded queue (PR-8 regression).
+
+All injection is deterministic in ``(seed, request index)`` via
+``repro.serving.faults`` — reruns corrupt the same bytes the same way.
+"""
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.codec import (CodecError, encode_pixels, ingest_batch,
+                         ingest as ingestlib)
+from repro.core import dct as dctlib
+from repro.core import dispatch as DSP
+from repro.core import jpeg as J
+from repro.core import plan as PL
+from repro.core import resnet as R
+from repro import serving as SV
+from repro.serving.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.serving.qos import QosPolicy
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = R.ResNetSpec(widths=(6, 8), num_classes=10)
+    params, state = R.init_resnet(jax.random.PRNGKey(0), spec)
+    key = jax.random.PRNGKey(7)
+    for name in params:
+        if "_bn" in name or name.endswith("bn"):
+            k1, k2, k3, k4, key = jax.random.split(key, 5)
+            c = params[name]["gamma"].shape[0]
+            params[name]["gamma"] = 1.0 + 0.2 * jax.random.normal(k1, (c,))
+            params[name]["beta"] = 0.1 * jax.random.normal(k2, (c,))
+            state[name]["mean"] = 0.1 * jax.random.normal(k3, (c,))
+            state[name]["var"] = 1.0 + 0.3 * jax.random.uniform(k4, (c,))
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 3, 16, 16)) * 0.5
+    coef = jnp.moveaxis(J.jpeg_encode(x, quality=spec.quality, scaled=True),
+                        1, 3)
+    cfg = DSP.DispatchConfig(path="reference")
+    plan = PL.build_plan(params, state, spec, dispatch=cfg)
+    return spec, params, state, coef, plan
+
+
+def _sched(plan, coef, **kw):
+    ladder = kw.pop("ladder", None) or SV.build_ladder(plan,
+                                                       caps=(None, 16))
+    kw.setdefault("batch", 2)
+    kw.setdefault("grid", tuple(coef.shape[1:3]))
+    kw.setdefault("channels", int(coef.shape[3]))
+    return SV.BandElasticScheduler(ladder, **kw)
+
+
+def _jpeg_traffic(n, seed=0):
+    rng = np.random.default_rng(seed)
+    qt = np.rint(dctlib.quantization_table(
+        75, dc_is_mean=False)).astype(np.int64)
+    return [encode_pixels(
+        np.clip(rng.normal(0, 0.3, (3, 16, 16)), -1.0, 127.0 / 128.0),
+        qtable=qt) for _ in range(n)]
+
+
+#: a breaker that never trips — for tests about containment, not tripping
+def _lenient():
+    return SV.BreakerPolicy(max_consecutive=10_000, min_samples=10_000)
+
+
+# --------------------------------------------------------------------------
+# ingest_batch isolation (unit)
+# --------------------------------------------------------------------------
+
+
+def test_ingest_isolation_survivors_and_errors():
+    datas = _jpeg_traffic(5, seed=2)
+    clean, _ = ingest_batch(datas, quality=75, grid=(2, 2))
+    bad = dict(datas=list(datas))["datas"]
+    bad[1] = bad[1][: len(bad[1]) // 3]          # truncated — EOI gone
+    bad[3] = bad[3][:2] + b"\x00" * 8 + bad[3][2:]  # garbage after SOI
+    batch, stats, errors = ingest_batch(bad, quality=75, grid=(2, 2),
+                                        on_error="isolate")
+    assert sorted(errors) == [1, 3]
+    assert all(isinstance(e, CodecError) for e in errors.values())
+    # survivors stack in original order, bit-identical to the clean decode
+    assert batch.shape[0] == 3
+    np.testing.assert_array_equal(batch, clean[[0, 2, 4]])
+
+
+def test_ingest_isolation_all_failed_empty_batch():
+    datas = [d[: len(d) // 2] for d in _jpeg_traffic(3, seed=4)]
+    batch, stats, errors = ingest_batch(datas, quality=75, grid=(2, 2),
+                                        on_error="isolate")
+    assert sorted(errors) == [0, 1, 2]
+    assert batch.shape == (0, 2, 2, 3, 64)
+    assert batch.dtype == np.float32
+
+
+def test_ingest_isolation_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="on_error"):
+        ingest_batch(_jpeg_traffic(1), on_error="explode")
+
+
+# --------------------------------------------------------------------------
+# deterministic fault placement
+# --------------------------------------------------------------------------
+
+
+def test_fault_injection_is_deterministic():
+    datas = _jpeg_traffic(24, seed=6)
+    spec = FaultSpec(seed=11, corrupt_rate=0.4)
+    a, b = FaultInjector(spec), FaultInjector(spec)
+    out_a = [a.corrupt(i, d) for i, d in enumerate(datas)]
+    out_b = [b.corrupt(i, d) for i, d in enumerate(datas)]
+    assert a.corrupted == b.corrupted
+    assert a.corrupted and len(a.corrupted) < len(datas)
+    assert out_a == out_b
+    for i, d in enumerate(datas):  # non-corrupt indices pass untouched
+        if i not in a.corrupted:
+            assert out_a[i] == d
+
+
+def test_guaranteed_fail_modes_always_raise():
+    """truncate/marker mutations must *always* produce a CodecError —
+    the chaos harness counts on corrupt == failed."""
+    from repro.codec import decode_bytes
+
+    datas = _jpeg_traffic(8, seed=8)
+    inj = FaultInjector(FaultSpec(seed=5, corrupt_rate=1.0))
+    for i, d in enumerate(datas):
+        mutated = inj.corrupt(i, d)
+        assert mutated != d
+        with pytest.raises(CodecError):
+            decode_bytes(mutated, quality=75, grid=(2, 2))
+    assert sorted(inj.corrupted) == list(range(8))
+
+
+# --------------------------------------------------------------------------
+# scheduler containment
+# --------------------------------------------------------------------------
+
+
+def test_corrupt_requests_contained_healthy_parity(setup):
+    """Corrupt bytes fail typed at stage "codec"; every healthy request
+    in the same burst keeps its fault-free predictions."""
+    spec, params, state, coef, plan = setup
+    datas = _jpeg_traffic(8, seed=10)
+    # pin the selector at the top tier in both runs — this test is about
+    # fault containment parity, not QoS degradation under the burst
+    calm = QosPolicy(high_depth=1e9, low_depth=0.5)
+
+    with _sched(plan, coef, breaker=_lenient(), policy=calm) as s:
+        want = [s.submit(d, kind="bytes").result(timeout=60)
+                for d in datas]
+
+    inj = FaultInjector(FaultSpec(seed=21, corrupt_rate=0.4))
+    sent = [inj.corrupt(i, d) for i, d in enumerate(datas)]
+    assert inj.corrupted and len(inj.corrupted) < len(datas)
+
+    with _sched(plan, coef, breaker=_lenient(), policy=calm,
+                faults=inj) as s:
+        reqs = [s.submit(d, kind="bytes") for d in sent]
+        for i, r in enumerate(reqs):
+            if i in inj.corrupted:
+                with pytest.raises(SV.RequestFailed) as ei:
+                    r.result(timeout=60)
+                assert ei.value.stage == "codec"
+                assert isinstance(ei.value.__cause__, CodecError)
+            else:
+                got = r.result(timeout=60)
+                np.testing.assert_allclose(got, want[i], atol=1e-5)
+                assert int(np.argmax(got)) == int(np.argmax(want[i]))
+        health = s.health()
+    assert health["worker_alive"] and health["ingest_alive"]
+    assert health["breaker"]["state"] == "closed"  # codec never feeds it
+    assert (s.metrics.failures_total()["codec"] == len(inj.corrupted))
+
+
+def test_executor_fault_contained_and_retried(setup):
+    """An injected executor fault burns the retry then fails only its
+    batch; the next dispatch serves normally."""
+    spec, params, state, coef, plan = setup
+    inj = FaultInjector(FaultSpec(executor_fail_batches=(0, 1)))
+    s = _sched(plan, coef, breaker=_lenient(), faults=inj,
+               executor_retries=1)
+    try:
+        doomed = s.submit(np.asarray(coef[0]))   # dispatch 0: in window
+        with pytest.raises(SV.RequestFailed) as ei:
+            doomed.result(timeout=60)
+        assert ei.value.stage == "executor"
+        assert isinstance(ei.value.__cause__, InjectedFault)
+        ok = s.submit(np.asarray(coef[1]))       # dispatch 1: outside window
+        assert np.isfinite(ok.result(timeout=60)).all()
+        assert s.metrics.failures_total()["executor"] == 1
+        assert s.health()["worker_alive"]
+    finally:
+        s.close()
+
+
+def test_transient_executor_fault_retry_succeeds(setup):
+    """A fault that clears before the retry budget leaves *no* failed
+    requests and no breaker failure."""
+    spec, params, state, coef, plan = setup
+    calls = []
+
+    class Flaky:
+        def on_ingest(self, reqs):
+            pass
+
+        def on_execute(self, seq, reqs):
+            calls.append(seq)
+            if len(calls) == 1:
+                raise InjectedFault("first attempt only")
+
+    with _sched(plan, coef, breaker=_lenient(), faults=Flaky(),
+                executor_retries=1) as s:
+        r = s.submit(np.asarray(coef[0]))
+        assert np.isfinite(r.result(timeout=60)).all()
+    assert calls == [0, 0]  # same dispatch seq, attempted twice
+    assert s.metrics.failures_total().get("executor", 0) == 0
+
+
+def test_ingest_infra_failure_contained(setup):
+    """Infrastructure dying under a whole decode batch fails only that
+    batch (stage "ingest"); the ingest thread keeps draining."""
+    spec, params, state, coef, plan = setup
+    datas = _jpeg_traffic(4, seed=12)
+    boom = RuntimeError("decode infrastructure down")
+    orig = ingestlib.ingest_batch
+    fails = [True]
+
+    def flaky(batch_datas, **kw):
+        if fails and fails.pop():
+            raise boom
+        return orig(batch_datas, **kw)
+
+    with _sched(plan, coef, breaker=_lenient()) as s:
+        with pytest.MonkeyPatch.context() as mp:
+            mp.setattr(ingestlib, "ingest_batch", flaky)
+            first = [s.submit(d, kind="bytes") for d in datas[:2]]
+            for r in first:
+                with pytest.raises(SV.RequestFailed) as ei:
+                    r.result(timeout=60)
+                assert ei.value.stage == "ingest"
+                assert ei.value.__cause__ is boom
+            rest = [s.submit(d, kind="bytes") for d in datas[2:]]
+            for r in rest:
+                assert np.isfinite(r.result(timeout=60)).all()
+        health = s.health()
+    assert health["ingest_alive"] and health["worker_alive"]
+    assert s.metrics.failures_total()["ingest"] == 2
+
+
+def test_breaker_trips_fast_rejects_then_recovers(setup):
+    """closed → open (ServiceUnavailable at submit) → half-open → closed,
+    each transition on the metrics timeline."""
+    spec, params, state, coef, plan = setup
+    policy = SV.BreakerPolicy(max_consecutive=1, min_samples=10_000,
+                              open_s=0.2, half_open_successes=1)
+    inj = FaultInjector(FaultSpec(executor_fail_batches=(0, 1)))
+    s = _sched(plan, coef, breaker=policy, faults=inj,
+               executor_retries=0)
+    try:
+        r = s.submit(np.asarray(coef[0]))
+        with pytest.raises(SV.RequestFailed):
+            r.result(timeout=60)
+        # breaker opened on the failed dispatch: fast-reject, typed
+        with pytest.raises(SV.ServiceUnavailable):
+            s.submit(np.asarray(coef[0]))
+        assert s.health()["breaker"]["state"] == "open"
+        assert s.metrics.failures_total()["rejected-open-breaker"] == 1
+        time.sleep(0.25)                     # open timer expires
+        probe = s.submit(np.asarray(coef[0]))  # admitted as the probe
+        assert np.isfinite(probe.result(timeout=60)).all()
+        deadline = time.monotonic() + 5.0
+        while (s.health()["breaker"]["state"] != "closed"
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        assert s.health()["breaker"]["state"] == "closed"
+        hops = [(e["from"], e["to"]) for e in s.metrics.breaker_timeline()]
+        assert hops == [("closed", "open"), ("open", "half_open"),
+                        ("half_open", "closed")]
+    finally:
+        s.close()
+
+
+def test_pool_kill_supervised_respawn(setup):
+    """SIGKILLing an ingest-pool worker mid-run surfaces as a supervised
+    respawn — requests still complete, ``pool_restarts`` ticks."""
+    spec, params, state, coef, plan = setup
+    datas = _jpeg_traffic(8, seed=14)
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setenv("JPEG_INGEST_WORKERS", "2")
+        try:
+            # warm the shared pool so there is a live worker to murder
+            ingestlib.ingest_batch(datas[:2], quality=75, grid=(2, 2))
+            assert ingestlib._POOL is not None
+            before = ingestlib.pool_restarts()
+            inj = FaultInjector(FaultSpec(kill_worker_before_batch=1))
+            with _sched(plan, coef, breaker=_lenient(), faults=inj,
+                        batch=4) as s:
+                reqs = [s.submit(d, kind="bytes") for d in datas]
+                for r in reqs:
+                    assert np.isfinite(r.result(timeout=120)).all()
+                assert s.health()["pool_restarts"] >= 1
+            assert inj.killed_pid is not None
+            assert ingestlib.pool_restarts() > before
+            assert s.metrics.failures_total().get("ingest", 0) == 0
+        finally:
+            ingestlib.shutdown_pool()
+
+
+# --------------------------------------------------------------------------
+# close() deadlock regression
+# --------------------------------------------------------------------------
+
+
+class _Die(BaseException):
+    """Worker-killing poison: *not* an Exception, so no retry, no
+    containment — the worker thread genuinely dies."""
+
+
+def test_close_survives_worker_death_with_full_decoded_queue(setup):
+    """PR-8 regression: the worker dies while the ingest thread is
+    blocked on the bounded decoded queue.  Before the fix the ingest
+    thread waited forever for queue room and ``close()`` hung on its
+    join; now every request resolves and close returns promptly."""
+    spec, params, state, coef, plan = setup
+    datas = _jpeg_traffic(10, seed=16)
+    release = threading.Event()
+
+    class Poison:
+        def on_ingest(self, reqs):
+            pass
+
+        def on_execute(self, seq, reqs):
+            release.wait(timeout=30)  # hold dispatch until the queue jams
+            raise _Die("worker killed by chaos harness")
+
+    s = _sched(plan, coef, batch=1, breaker=_lenient(), faults=Poison())
+    try:
+        reqs = [s.submit(d, kind="bytes") for d in datas]
+        # let the ingest thread fill the decoded queue to its cap and
+        # block; only then kill the worker
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            with s._lock:
+                jammed = (len(s._decoded) >= s._decoded_cap
+                          and s._ingesting > 0)
+            if jammed:
+                break
+            time.sleep(0.005)
+        release.set()
+        for r in reqs:
+            with pytest.raises(BaseException):
+                r.result(timeout=30)
+            assert r.error() is not None
+
+        done = threading.Event()
+
+        def closer():
+            try:
+                s.close()
+            except BaseException:
+                pass  # close re-raises the worker's death — fine
+            done.set()
+
+        t = threading.Thread(target=closer, daemon=True)
+        t.start()
+        assert done.wait(timeout=30), "close() deadlocked"
+        assert not s._ingest_thread.is_alive()
+        assert not s._worker.is_alive()
+    finally:
+        release.set()

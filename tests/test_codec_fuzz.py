@@ -1,0 +1,132 @@
+"""Corpus fuzz: every committed fixture, truncated and bit-flipped.
+
+Property: no mutation of a valid JPEG may escape the typed error
+contract — decode either succeeds (bit-flips can be semantically
+invisible; JPEG carries no checksum) or raises a
+:class:`~repro.codec.CodecError` subclass carrying byte-offset context.
+Bare ``ValueError``/``IndexError``/hangs are bugs.  The lockstep decoder
+must reproduce the scalar decoder's exception for the same broken
+stream (the serving isolation path depends on that parity).
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+shim in ``tests/_hypothesis_compat.py``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.codec import CodecError, decode_bytes
+from repro.codec import bitstream as bs
+from repro.codec import lockstep as lk
+
+FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "codec")
+FIXTURES = ("color_q75_dri", "color_q75_dri_trailing_rst",
+            "color_q85_420", "gray_q80")
+_CACHE: dict[str, bytes] = {}
+
+
+def _fixture_bytes(name: str) -> bytes:
+    if name not in _CACHE:
+        with open(os.path.join(FIXDIR, name + ".jpg"), "rb") as f:
+            _CACHE[name] = f.read()
+    return _CACHE[name]
+
+
+@settings(max_examples=60)
+@given(st.sampled_from(FIXTURES), st.floats(0.001, 0.999))
+def test_truncation_always_typed(name, frac):
+    """Cutting the file anywhere must raise CodecError — the EOI marker
+    is gone, so there is no silent-success path."""
+    data = _fixture_bytes(name)
+    cut = min(max(1, int(len(data) * frac)), len(data) - 1)
+    with pytest.raises(CodecError) as ei:
+        decode_bytes(data[:cut])
+    err = ei.value
+    assert err.offset is None or 0 <= err.offset <= cut
+    assert str(err)  # renders, with any offset/marker context inline
+
+
+@settings(max_examples=60)
+@given(st.sampled_from(FIXTURES), st.floats(0.0, 1.0),
+       st.integers(0, 7))
+def test_bitflip_typed_or_decodes(name, pos_frac, bit):
+    """A single bit-flip either decodes (no checksum — a flipped
+    coefficient bit is legal data) or raises CodecError.  Anything
+    else — bare ValueError, IndexError, wrong shape — is a bug."""
+    data = _fixture_bytes(name)
+    at = min(2 + int(pos_frac * (len(data) - 4)), len(data) - 3)
+    arr = bytearray(data)
+    arr[at] ^= 1 << bit
+    try:
+        out = decode_bytes(bytes(arr))
+    except CodecError:
+        return
+    clean = decode_bytes(data)
+    assert out.shape == clean.shape
+    assert out.dtype == clean.dtype
+    assert np.isfinite(out).all()
+
+
+@settings(max_examples=40)
+@given(st.sampled_from(FIXTURES), st.integers(0, 3))
+def test_segment_mutation_scalar_lockstep_parity(name, drop):
+    """The lockstep decoder reproduces the scalar decoder's exception —
+    same type, same message — for a stream whose entropy-coded bits were
+    truncated after header parse."""
+    scan = bs.prepare_scan(_fixture_bytes(name))
+    keep = max(0, len(scan.segments[-1]) // 4 * drop)
+    broken = scan._replace(segments=tuple(
+        list(scan.segments[:-1]) + [scan.segments[-1][:keep]]))
+    try:
+        bs.decode_scan(broken)
+        scalar_err = None
+    except Exception as e:  # noqa: BLE001 — parity is the property
+        scalar_err = e
+    try:
+        lk.decode_scans([broken])
+        lockstep_err = None
+    except Exception as e:  # noqa: BLE001
+        lockstep_err = e
+    if scalar_err is None:
+        assert lockstep_err is None
+    else:
+        assert isinstance(scalar_err, CodecError)
+        assert type(lockstep_err) is type(scalar_err)
+        assert str(lockstep_err) == str(scalar_err)
+
+
+def test_error_context_attributes():
+    """Structured context survives on the common corruption shapes."""
+    data = _fixture_bytes("color_q75_dri")
+    with pytest.raises(bs.MarkerError) as ei:
+        bs.prepare_scan(b"\x00\x00" + data[2:])
+    assert ei.value.offset == 0                    # missing SOI
+    with pytest.raises(bs.TruncatedJpegError) as ei:
+        bs.prepare_scan(data[:-2])                 # EOI cut off
+    assert ei.value.offset is not None
+    sos = data.find(b"\xff\xda")
+    mutated = bytearray(data)
+    ecs = sos + 2 + int.from_bytes(data[sos + 2:sos + 4], "big")
+    mutated[ecs + 8:ecs + 10] = b"\xff\xc7"        # unescaped marker
+    with pytest.raises(CodecError):
+        decode_bytes(bytes(mutated))
+
+
+def test_isolation_matches_per_image_errors():
+    """`ingest_batch(on_error="isolate")` reports, per failed index, the
+    same exception type+message the scalar per-image decode raises."""
+    from repro.codec import ingest_batch
+
+    datas = [_fixture_bytes(n) for n in FIXTURES]
+    datas[1] = datas[1][: len(datas[1]) // 2]
+    datas[3] = datas[3][: len(datas[3]) * 3 // 4]
+    kw = dict(quality=50, grid=(5, 5), channels=3)
+    _, _, errors = ingest_batch(datas, on_error="isolate", **kw)
+    assert sorted(errors) == [1, 3]
+    for i, err in errors.items():
+        with pytest.raises(CodecError) as ei:
+            decode_bytes(datas[i], **kw)
+        assert type(err) is type(ei.value)
+        assert str(err) == str(ei.value)

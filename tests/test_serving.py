@@ -209,29 +209,44 @@ def test_scheduler_close_without_drain_fails_pending(setup):
         s.submit(np.asarray(coef[0]))
 
 
-def test_scheduler_worker_exception_propagates(setup):
-    """A crash in the forward fails every pending waiter, poisons new
-    submissions, and re-raises at close() — never a hang (the PR-4
-    prefetch contract)."""
+def test_scheduler_worker_exception_contained(setup):
+    """A crash in the forward fails only its own batch — with
+    RequestFailed carrying the cause — and the scheduler keeps serving
+    (the PR-8 fault-isolation contract; the old behaviour poisoned the
+    scheduler and every future submission)."""
     spec, params, state, coef, plan = setup
-    s = _sched(plan, coef)
+    # an always-failing executor would trip the breaker (by design);
+    # this test is about containment, so hold the breaker wide open
+    lenient = SV.BreakerPolicy(max_consecutive=10_000, min_samples=10_000)
+    s = _sched(plan, coef, breaker=lenient, executor_retries=1)
     boom = RuntimeError("forward exploded")
+    originals = {}
+    for ex in {id(e): e for e in s._execs}.values():
+        originals[id(ex)] = ex.coef_fn
+
+    calls = []
 
     def bad_fn(_):
+        calls.append(1)
         raise boom
 
     for ex in {id(e): e for e in s._execs}.values():
         ex.coef_fn = bad_fn
     r = s.submit(np.asarray(coef[0]))
-    with pytest.raises(RuntimeError, match="forward exploded"):
+    with pytest.raises(SV.RequestFailed) as ei:
         r.result(timeout=30)
-    # subsequent submissions observe the failure instead of queueing
-    with pytest.raises(RuntimeError, match="forward exploded"):
-        for _ in range(100):
-            s.submit(np.asarray(coef[0]))
-            time.sleep(0.01)
-    with pytest.raises(RuntimeError, match="forward exploded"):
-        s.close()
+    assert ei.value.stage == "executor"
+    assert ei.value.__cause__ is boom
+    # the bounded retry ran: original attempt + 1 retry
+    assert len(calls) == 2
+    # the scheduler survived: restore the executor and serve normally
+    for ex in {id(e): e for e in s._execs}.values():
+        ex.coef_fn = originals[id(ex)]
+    r2 = s.submit(np.asarray(coef[0]))
+    assert r2.result(timeout=60) is not None
+    assert s.metrics.failures_total().get("executor", 0) >= 1
+    assert s.health()["worker_alive"]
+    s.close()  # no re-raise: the failure was contained, not fatal
 
 
 def test_scheduler_admission_control(setup):
