@@ -480,7 +480,7 @@ def _run_serving(emit, params, state, coef, batch, reduced):
     ladder_fx = sv.PlanLadder((ladder_el.tiers[0],), plan, (None,),
                               ladder_el.image_size, ladder_el.vmem_budget)
 
-    def run_config(ladder):
+    def run_config(ladder, tracer=None):
         metrics = sv.ServeMetrics()
         # fixed-bucket capture: this sweep isolates the QoS *tier* policy
         # under a saturated stream, where every batch fills anyway — the
@@ -489,7 +489,7 @@ def _run_serving(emit, params, state, coef, batch, reduced):
         sched = sv.BandElasticScheduler(ladder, batch=slots,
                                         metrics=metrics, max_pending=n_req,
                                         grid=grid, channels=coef.shape[3],
-                                        buckets=(slots,))
+                                        buckets=(slots,), tracer=tracer)
         with sched:
             sched.warmup(kinds=("coefficients",))
             t0 = time.perf_counter()
@@ -501,6 +501,10 @@ def _run_serving(emit, params, state, coef, batch, reduced):
 
     fixed_reqs, fixed_wall, fixed_rep = run_config(ladder_fx)
     el_reqs, el_wall, el_rep = run_config(ladder_el)
+    # flight recorder on the identical elastic configuration: the ring is
+    # sized to hold the whole run, so the ratio is the *recording* cost
+    tracer = sv.Tracer(capacity=1 << 17)
+    _, tr_wall, _ = run_config(ladder_el, tracer=tracer)
 
     # fidelity gate: every request the elastic run served at the top tier
     # must match the per-layer plan walk's top-1 on that image
@@ -531,6 +535,13 @@ def _run_serving(emit, params, state, coef, batch, reduced):
          f"{tp_e / tp_f:.2f}x saturated throughput over fixed top tier "
          f"(band-elastic QoS, {len(el_rep['tier_switches'])} switches, "
          f"top1_agree_top={agree:.3f})", speedup=tp_e / tp_f)
+    # informational (unguarded): the same elastic run with the flight
+    # recorder on — recording overhead as a fraction of throughput
+    tp_t = n_req / tr_wall
+    summ = tracer.summary()
+    emit("fig5/serving_trace_overhead", tr_wall / n_req * 1e6,
+         f"img_per_s={tp_t:.1f} overhead={(tr_wall / el_wall - 1) * 100:+.1f}% "
+         f"events={summ['events']} dropped={summ['dropped']}")
 
 
 def _run_grid(emit, coef, reduced):

@@ -31,6 +31,10 @@ def main() -> None:
                     help="fault-drill the run (needs --ingest bytes): "
                          "corrupt 20%% of requests, kill an ingest "
                          "worker, fail two executor dispatches")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable Chrome trace of the run")
+    ap.add_argument("--metrics-out", default=None,
+                    help="periodically snapshot Prometheus-style metrics")
     args = ap.parse_args()
     ns = argparse.Namespace(arch="jpeg-resnet", reduced=True, qos=True,
                             batch=args.batch, requests=args.requests,
@@ -40,7 +44,10 @@ def main() -> None:
                             ingest=args.ingest, jpeg_dir=None,
                             tiers=args.tiers, deadline_ms=args.deadline_ms,
                             max_queue=None, report_out=None,
-                            chaos=args.chaos)
+                            chaos=args.chaos, trace_out=args.trace_out,
+                            trace_capacity=65536,
+                            metrics_out=args.metrics_out,
+                            metrics_interval=1.0, jax_profile=None)
     out = serve_jpeg_resnet(ns)
     qos = out["qos"]
     lat = out["latency_ms"]
@@ -66,6 +73,11 @@ def main() -> None:
     for ev in qos["breaker_timeline"]:
         print(f"  breaker @{ev['seq']}: {ev['from']} -> {ev['to']} "
               f"({ev['reason']})")
+    if "trace" in out:
+        tr = out["trace"]
+        print(f"  trace: {tr['events']} events -> {tr['path']} "
+              f"({tr['dropped']} dropped of {tr['capacity']} capacity) — "
+              f"open in https://ui.perfetto.dev")
     if "chaos" in out:
         ch = out["chaos"]
         print(f"  chaos: {ch['corrupted']} corrupted "

@@ -208,7 +208,7 @@ def _decode_shard(datas: list[bytes], quality: int,
 
 def _pool_shards(shards: list[list[bytes]], quality: int,
                  grid: tuple[int, int] | None, channels: int | None,
-                 isolate: bool, workers: int
+                 isolate: bool, workers: int, on_shard=None
                  ) -> list[tuple[int, list[np.ndarray | Exception]]] | None:
     """Run shards on the shared pool under supervision.
 
@@ -219,6 +219,12 @@ def _pool_shards(shards: list[list[bytes]], quality: int,
     ``pool_max_restarts()`` times; ``None`` means supervision is
     exhausted and the caller must decode in-process (last resort — slow
     but alive).
+
+    ``on_shard(shard_index, n_images, t0_s, t1_s)`` is an observability
+    hook: per-shard submit→done wall on ``time.monotonic`` (done is
+    stamped by the future's completion callback, so it measures the
+    worker, not the caller's ``.result()`` ordering).  Only the
+    successful attempt reports.
     """
     global _POOL_RESTARTS
     attempts = pool_max_restarts() + 1
@@ -227,10 +233,25 @@ def _pool_shards(shards: list[list[bytes]], quality: int,
         try:
             # submit is inside the try: a worker killed *between* batches
             # marks the pool broken and submit itself raises
-            futs = [(i, pool.submit(_decode_shard, shard, quality, grid,
-                                    channels, isolate))
-                    for i, shard in enumerate(shards) if shard]
-            return [(i, fut.result()) for i, fut in futs]
+            futs = []
+            done_at: dict[int, float] = {}
+            for i, shard in enumerate(shards):
+                if not shard:
+                    continue
+                t_sub = time.monotonic()
+                fut = pool.submit(_decode_shard, shard, quality, grid,
+                                  channels, isolate)
+                if on_shard is not None:
+                    fut.add_done_callback(
+                        lambda f, i=i: done_at.__setitem__(
+                            i, time.monotonic()))
+                futs.append((i, t_sub, fut))
+            results = [(i, fut.result()) for i, _, fut in futs]
+            if on_shard is not None:
+                for i, t_sub, fut in futs:
+                    on_shard(i, len(shards[i]), t_sub,
+                             done_at.get(i, time.monotonic()))
+            return results
         except BrokenProcessPool:
             _POOL_RESTARTS += 1
             shutdown_pool()
@@ -241,8 +262,8 @@ def _pool_shards(shards: list[list[bytes]], quality: int,
 
 def _decode_planes(datas: list[bytes], *, quality: int,
                    grid: tuple[int, int] | None, channels: int | None,
-                   parallel: bool | None, isolate: bool = False
-                   ) -> list[np.ndarray | Exception]:
+                   parallel: bool | None, isolate: bool = False,
+                   on_shard=None) -> list[np.ndarray | Exception]:
     """Decode a batch to normalized planes, order-preserving.
 
     ``parallel=False``: strict sequential scalar reference.  ``True``:
@@ -253,6 +274,11 @@ def _decode_planes(datas: list[bytes], *, quality: int,
 
     ``isolate=True`` returns the per-image exception in place of the
     plane at each failed index instead of raising.
+
+    ``on_shard(batch_indices, t0_s, t1_s)`` reports each spawn-pool
+    shard's wall with the *original batch indices* it decoded; it only
+    fires when the pool path actually ran (in-process decode is covered
+    by the caller's whole-batch timing).
     """
     if parallel is False:
         out: list[np.ndarray | Exception] = []
@@ -268,8 +294,14 @@ def _decode_planes(datas: list[bytes], *, quality: int,
     workers = ingest_workers()
     if workers > 1 and len(datas) >= 2:
         shards = [datas[i::workers] for i in range(workers)]
+        cb = None
+        if on_shard is not None:
+            def cb(i, n, ta, tb):
+                # shard i holds datas[i::workers] — recover the original
+                # batch indices so the caller can label its requests
+                on_shard(list(range(i, len(datas), workers))[:n], ta, tb)
         results = _pool_shards(shards, quality, grid, channels, isolate,
-                               workers)
+                               workers, on_shard=cb)
         if results is not None:
             planes: list[np.ndarray | Exception | None] = [None] * len(datas)
             for i, shard_planes in results:
@@ -293,7 +325,8 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
                  pack_width: int | None = None,
                  with_stats: bool = True,
                  parallel: bool | None = None,
-                 on_error: str = "raise"):
+                 on_error: str = "raise",
+                 on_shard=None):
     """Decode + normalize a batch of JPEG byte strings.
 
     Returns ``(batch, stats)``: ``batch`` is ``(N, bh, bw, C, 64)``
@@ -319,6 +352,10 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
     ``(0,)``).  Healthy batches pay no overhead — the joint lockstep
     decode runs exactly as in ``"raise"`` mode and per-image fallback
     only triggers on failure.
+
+    ``on_shard(batch_indices, t0_s, t1_s)`` is the flight-recorder hook:
+    per-spawn-pool-shard decode wall (``time.monotonic``), labelled with
+    the original batch indices — see :func:`_decode_planes`.
     """
     datas = list(datas)
     if not datas:
@@ -329,7 +366,7 @@ def ingest_batch(datas: Iterable[bytes], *, quality: int = 50,
     isolate = on_error == "isolate"
     planes = _decode_planes(datas, quality=quality, grid=grid,
                             channels=channels, parallel=parallel,
-                            isolate=isolate)
+                            isolate=isolate, on_shard=on_shard)
     errors: dict[int, Exception] = {
         i: p for i, p in enumerate(planes) if isinstance(p, Exception)}
     planes = [p for p in planes if not isinstance(p, Exception)]

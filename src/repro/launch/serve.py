@@ -59,8 +59,10 @@ CPU example:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
+import subprocess
 import time
 from typing import Any
 
@@ -73,7 +75,46 @@ from repro.core import dispatch as dispatchlib
 from repro.models.registry import build_model
 
 __all__ = ["main", "serve_lm", "serve_jpeg_resnet", "prepare_plan",
-           "prepare_ladder", "parse_tiers", "jpeg_byte_requests"]
+           "prepare_ladder", "parse_tiers", "jpeg_byte_requests",
+           "run_metadata"]
+
+
+def _git_sha() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return None
+
+
+def run_metadata(args, *, plan=None, ladder=None, buckets=None) -> dict:
+    """Run-identity block embedded in every serve report (``meta``): git
+    sha, backend, device count, dispatch config, band tiers, and bucket
+    schedule — the same provenance the fig5 benchmark rows carry, so
+    reports from different runs/machines are comparable artifacts."""
+    meta: dict[str, Any] = {
+        "git_sha": _git_sha(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "seed": args.seed,
+        "batch": args.batch,
+        "requests": args.requests,
+        "reduced": bool(getattr(args, "reduced", False)),
+        "ingest": getattr(args, "ingest", "coefficients"),
+    }
+    if plan is not None:
+        meta["dispatch"] = plan.cfg.path
+        meta["bands_min"] = min(plan.bands.values())
+        meta["bands_max"] = max(plan.bands.values())
+    if ladder is not None:
+        meta["band_tiers"] = [
+            {"name": t.name, "cap": t.cap,
+             "bands": sorted(set(t.bands.values()))} for t in ladder.tiers]
+    if buckets is not None:
+        meta["batch_buckets"] = list(buckets)
+    return meta
 
 #: quality mix of the synthetic byte stream — one compiled plan serves all
 #: of them through codec.normalize's per-image qtable rescale.
@@ -445,6 +486,24 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
     metrics = serving.ServeMetrics()
     payload_of, kind = _qos_request_source(args, cfg, args.seed)
 
+    # observability sidecars — all torn down on *any* exit (flight
+    # recorder semantics: a crashed run still leaves its trace behind)
+    obs = contextlib.ExitStack()
+    tracer = None
+    trace_path = getattr(args, "trace_out", None)
+    if trace_path:
+        tracer = serving.Tracer(
+            capacity=int(getattr(args, "trace_capacity", None) or 65536))
+        obs.callback(lambda: tracer.write(trace_path))
+    metrics_path = getattr(args, "metrics_out", None)
+    if metrics_path:
+        obs.callback(serving.MetricsWriter(
+            metrics, metrics_path,
+            interval_s=float(getattr(args, "metrics_interval", None)
+                             or 1.0)).close)
+    obs.enter_context(
+        serving.jax_profile(getattr(args, "jax_profile", None)))
+
     chaos = getattr(args, "chaos", False)
     faults, breaker_policy = None, None
     if chaos:
@@ -461,8 +520,8 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
     sched = serving.BandElasticScheduler(
         ladder, batch=args.batch, metrics=metrics, max_pending=max_pending,
         grid=(n_blocks, n_blocks), channels=cfg.in_channels,
-        breaker=breaker_policy, faults=faults)
-    with sched:
+        breaker=breaker_policy, faults=faults, tracer=tracer)
+    with obs, sched:
         sched.warmup(kinds=(kind,))
         gs = sched.grid_engine.summary()
         print(f"[serve] plan grid: {gs['distinct_columns']} tier columns x "
@@ -544,7 +603,18 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
            "dispatch": plan.cfg.path, "ingest": kind,
            "latency_ms": qos_report["latency_ms"],
            "qos": qos_report, "plan": plan_info,
-           "health": health}
+           "health": health,
+           "meta": run_metadata(args, plan=plan, ladder=ladder,
+                                buckets=sched.buckets)}
+    if tracer is not None:
+        s = tracer.summary()
+        out["trace"] = {"path": trace_path, "events": s["events"],
+                        "dropped": s["dropped"],
+                        "capacity": s["capacity"]}
+        print(f"[serve] flight recorder: {s['events']} events "
+              f"({s['dropped']} dropped) -> {trace_path}")
+    if metrics_path:
+        out["metrics_out"] = metrics_path
     if chaos:
         stages: dict[str, int] = {}
         for _, r in requests:
@@ -601,6 +671,10 @@ def serve_jpeg_resnet(args) -> dict:
         # thin-CLI handoff: the band-elastic runtime owns batching, tier
         # selection, deadlines, and metrics from here on
         return _serve_jpeg_qos(args, cfg, plan, plan_info)
+    if getattr(args, "trace_out", None) or getattr(args, "metrics_out",
+                                                   None):
+        print("[serve] --trace-out/--metrics-out instrument the QoS "
+              "runtime; ignored without --qos")
 
     if compiled is not None:
         meta = compiled.meta or {}
@@ -722,7 +796,8 @@ def serve_jpeg_resnet(args) -> dict:
            "completed": completed, "dispatch": plan.cfg.path,
            "ingest": ingest_mode,
            "latency_ms": servemetrics.percentiles(latencies),
-           "plan": plan_info}
+           "plan": plan_info,
+           "meta": run_metadata(args, plan=plan)}
     if ingest_mode == "bytes" and collected:
         from repro.codec import merge_stats
 
@@ -798,6 +873,25 @@ def main() -> None:
                          "for --qos (default: accept the whole burst)")
     ap.add_argument("--report-out", default=None,
                     help="also write the serve report JSON to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the --qos flight-recorder trace (Chrome "
+                         "trace-event JSON, Perfetto-loadable: per-request "
+                         "admission/queue/decode/dispatch spans, tier and "
+                         "breaker instants, batch->request flow links) "
+                         "to this path — written on any exit, crash "
+                         "included")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="flight-recorder ring size in events; when full "
+                         "the oldest events are dropped (and counted)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write Prometheus-style text metrics snapshots "
+                         "(serving.ServeMetrics.metrics_text) to this "
+                         "path periodically during --qos serving")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    help="seconds between --metrics-out snapshots")
+    ap.add_argument("--jax-profile", default=None,
+                    help="directory for a jax.profiler device trace "
+                         "covering the same window as --trace-out")
     ap.add_argument("--chaos", action="store_true",
                     help="fault-drill the --qos byte stream: corrupt a "
                          "fraction of requests (guaranteed-fail byte "

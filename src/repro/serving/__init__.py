@@ -19,9 +19,14 @@ serving subsystem on top of the convert-once engine (``core.plan``):
 * :mod:`repro.serving.qos` — the band-elastic policy: queue-depth and
   deadline-slack signals pick the tier per batch, degrading bands under
   overload and recovering (with hysteresis) as the queue drains;
-* :mod:`repro.serving.metrics` — per-request latency percentiles,
-  per-tier throughput, tier-switch events, ingest occupancy, failure
-  counters per reason, breaker state timeline;
+* :mod:`repro.serving.metrics` — per-request latency histograms (O(1)
+  memory log₂ buckets), per-tier throughput, tier-switch events, ingest
+  occupancy, failure counters per reason, breaker state timeline, and a
+  Prometheus-style text exposition with periodic snapshot writes;
+* :mod:`repro.serving.trace` — the flight recorder: a bounded ring of
+  per-request spans (admission → queue → ingest-decode → batch-form →
+  pad/stage → device-dispatch → complete/fail/shed) exported as
+  Perfetto-loadable Chrome trace-event JSON;
 * :mod:`repro.serving.breaker` — a circuit breaker over service-level
   failures: fast-rejects (``ServiceUnavailable``) while the backend is
   evidently unhealthy, half-opens on a timer;
@@ -54,8 +59,20 @@ from repro.serving.ladder import (
 )
 from repro.serving.breaker import BreakerPolicy, CircuitBreaker
 from repro.serving.faults import FaultInjector, FaultSpec, InjectedFault
-from repro.serving.metrics import ServeMetrics, percentiles
+from repro.serving.metrics import (
+    Log2Histogram,
+    MetricsWriter,
+    ServeMetrics,
+    percentiles,
+)
 from repro.serving.qos import QosPolicy, TierSelector
+from repro.serving.trace import (
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    jax_profile,
+    validate_trace,
+)
 from repro.serving.scheduler import (
     BandElasticScheduler,
     DeadlineExceeded,
@@ -81,8 +98,15 @@ __all__ = [
     "cap_plan",
     "save_ladder",
     "load_ladder",
+    "Log2Histogram",
+    "MetricsWriter",
+    "NULL_TRACER",
+    "NullTracer",
     "ServeMetrics",
+    "Tracer",
+    "jax_profile",
     "percentiles",
+    "validate_trace",
     "QosPolicy",
     "TierSelector",
     "BandElasticScheduler",

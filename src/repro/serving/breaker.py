@@ -75,6 +75,8 @@ class CircuitBreaker:
         self._opened_at = 0.0
         self._probe_successes = 0
         self._last_failure_reason: str | None = None
+        self._since = self._clock()   # clock reading at last transition
+        self._transitions = 0
 
     # -- internal ----------------------------------------------------------
 
@@ -88,8 +90,11 @@ class CircuitBreaker:
         if to == CLOSED:
             self._outcomes.clear()
             self._consecutive = 0
-        if self._on_transition is not None and frm != to:
-            self._on_transition(frm, to, reason)
+        if frm != to:
+            self._since = self._clock()
+            self._transitions += 1
+            if self._on_transition is not None:
+                self._on_transition(frm, to, reason)
 
     def _should_open(self) -> bool:
         p = self.policy
@@ -150,6 +155,8 @@ class CircuitBreaker:
             n = len(self._outcomes)
             return {
                 "state": self._state,
+                "state_age_s": round(self._clock() - self._since, 6),
+                "transitions": self._transitions,
                 "window_failure_rate": (sum(self._outcomes) / n) if n else 0.0,
                 "window_samples": n,
                 "consecutive_failures": self._consecutive,

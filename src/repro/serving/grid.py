@@ -40,6 +40,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import plan as planlib
+from repro.serving.trace import NULL_TRACER
 
 __all__ = [
     "batch_buckets",
@@ -157,31 +158,41 @@ class GridCell:
     """
 
     __slots__ = ("name", "bucket", "item_shape", "hits", "_fn", "_pool",
-                 "_shape")
+                 "_shape", "_tracer")
 
     def __init__(self, name: str, bucket: int, item_shape,
-                 fn: Callable, pool: PinnedPool):
+                 fn: Callable, pool: PinnedPool, tracer=None):
         self.name = name
         self.bucket = int(bucket)
         self.item_shape = tuple(int(s) for s in item_shape)
         self._shape = (self.bucket, *self.item_shape)
         self._fn = fn
         self._pool = pool
+        self._tracer = tracer if tracer is not None else NULL_TRACER
         self.hits = 0
 
-    def __call__(self, rows: np.ndarray) -> jnp.ndarray:
+    def __call__(self, rows: np.ndarray, rids=None) -> jnp.ndarray:
         rows = np.asarray(rows, np.float32)
         n = rows.shape[0]
         if n > self.bucket or tuple(rows.shape[1:]) != self.item_shape:
             raise ValueError(
                 f"cell {self.name} serves shape {self._shape}, "
                 f"got {tuple(rows.shape)}")
+        tr = self._tracer
+        ta = tr.now() if tr.enabled else 0.0
         host = self._pool.get(self._shape)
         host[:n] = rows
         if n < self.bucket:
             host[n:] = 0.0
+        dev = jnp.array(host)
+        if tr.enabled:
+            # nested under the scheduler's device-dispatch span: the
+            # host-staging + host->device copy share of the dispatch
+            tr.span("device", "pad/stage", ta, tr.now(),
+                    args={"cell": self.name, "n": n,
+                          "pad": self.bucket - n, "rids": rids})
         self.hits += 1
-        return self._fn(jnp.array(host))
+        return self._fn(dev)
 
     def warmup(self) -> None:
         host = self._pool.get(self._shape)
@@ -205,7 +216,7 @@ class GridColumn:
                  buckets=None, pool: PinnedPool | None = None,
                  donate: bool = True,
                  on_compile: Callable[[str], None] | None = None,
-                 tier_name: str = "tier"):
+                 tier_name: str = "tier", tracer=None):
         self.compiled = compiled
         self.executor = executor
         self.w_in = compiled.stem.w_in
@@ -213,6 +224,7 @@ class GridColumn:
         self.donate = donate
         self.tier_name = tier_name
         self.pool = pool if pool is not None else PinnedPool()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._on_compile = on_compile
         self.cells: dict[tuple[str, int], GridCell] = {}
 
@@ -229,23 +241,25 @@ class GridColumn:
                 on_trace=(None if on_compile is None
                           else (lambda: on_compile(name))))
             c = self.cells[key] = GridCell(name, bucket, item_shape, fn,
-                                           self.pool)
+                                           self.pool, tracer=self.tracer)
         return c
 
-    def _route(self, kind: str, rows: np.ndarray) -> jnp.ndarray:
+    def _route(self, kind: str, rows: np.ndarray,
+               rids=None) -> jnp.ndarray:
         rows = np.asarray(rows, np.float32)
         n = rows.shape[0]
         bucket = n if self.buckets is None else bucket_for(n, self.buckets)
-        return self.cell(kind, bucket, rows.shape[1:])(rows)
+        return self.cell(kind, bucket, rows.shape[1:])(rows, rids=rids)
 
-    def coef_fn(self, rows: np.ndarray) -> jnp.ndarray:
+    def coef_fn(self, rows: np.ndarray, rids=None) -> jnp.ndarray:
         """Serve a ``(n, bh, bw, C, 64)`` coefficient batch (n need not
-        match any bucket — the covering cell pads)."""
-        return self._route("coefficients", rows)
+        match any bucket — the covering cell pads).  ``rids`` labels the
+        rows' request ids on the flight-recorder span, nothing more."""
+        return self._route("coefficients", rows, rids=rids)
 
-    def packed_fn(self, rows: np.ndarray) -> jnp.ndarray:
+    def packed_fn(self, rows: np.ndarray, rids=None) -> jnp.ndarray:
         """Serve a ``(n, bh, bw, C·w_in)`` tile-packed batch."""
-        return self._route("bytes", rows)
+        return self._route("bytes", rows, rids=rids)
 
 
 class PlanGrid:
@@ -261,7 +275,8 @@ class PlanGrid:
     def __init__(self, ladder, *, batch: int, buckets=None,
                  grid: tuple[int, int] | None = None, channels: int = 3,
                  executor: str | None = None, donate: bool = True,
-                 on_compile: Callable[[str], None] | None = None):
+                 on_compile: Callable[[str], None] | None = None,
+                 tracer=None):
         if batch < 1:
             raise ValueError("batch must be >= 1")
         self.ladder = ladder
@@ -280,7 +295,7 @@ class PlanGrid:
                 by_id[key] = GridColumn(
                     tier.compiled, executor, buckets=self.buckets,
                     pool=self.pool, donate=donate, on_compile=on_compile,
-                    tier_name=tier.name)
+                    tier_name=tier.name, tracer=tracer)
             self.columns.append(by_id[key])
         self.distinct = list(by_id.values())
 

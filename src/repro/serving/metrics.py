@@ -6,18 +6,36 @@ the QoS selector records tier-switch events, the ingest path records the
 codec's per-band occupancy stats — and :meth:`ServeMetrics.report` folds
 everything into the JSON-serializable block the serve report embeds.
 
+Latency storage is O(1) in request count: samples land in fixed-bucket
+log₂ histograms (:class:`Log2Histogram`) rather than unbounded Python
+lists, so the recorder can run under sustained traffic without growing.
+Histograms keep exact ``n``/``sum``/``min``/``max``; percentiles are
+interpolated within a bucket, so the error is bounded by one bucket
+width (sub-buckets per octave keep that under ~12.5% relative by
+default).  :meth:`ServeMetrics.metrics_text` renders the same state as
+Prometheus text exposition, and :class:`MetricsWriter` snapshots it to a
+file on a timer for live scraping (``serve.py --metrics-out``).
+
+Event timelines (``tier_switches``, ``breaker_timeline``) are stamped
+with ``t_s`` — seconds since recorder construction on an injectable
+monotonic clock — so they correlate with flight-recorder spans
+(``serving/trace.py``) and, later, across shards.
+
 :func:`percentiles` is also used standalone by the non-QoS slot loop in
 ``launch/serve.py`` so plain serving reports p50/p95/p99 per-request
 latency too, not just aggregate wall clock.
 """
 from __future__ import annotations
 
+import math
+import os
 import threading
-from typing import Any, Iterable, Sequence
+import time
+from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
-__all__ = ["percentiles", "ServeMetrics"]
+__all__ = ["percentiles", "Log2Histogram", "ServeMetrics", "MetricsWriter"]
 
 
 def percentiles(latencies_s: Sequence[float],
@@ -40,18 +58,129 @@ def percentiles(latencies_s: Sequence[float],
     return out
 
 
+class Log2Histogram:
+    """Fixed-size log₂ latency histogram (HdrHistogram-style).
+
+    The value axis is split into ``octaves`` powers of two starting at
+    ``base`` seconds, each octave into ``sub`` linear sub-buckets —
+    ``octaves * sub`` counters total, O(1) memory however many samples
+    land.  Defaults cover 10 µs … ~670 s with 12.5% relative bucket
+    width.  ``n``/``sum``/``min``/``max`` are tracked exactly; only
+    percentiles are approximate (linear interpolation inside the bucket
+    holding the target rank, so the error is at most one bucket width).
+
+    Not thread-safe on its own — :class:`ServeMetrics` records under its
+    lock.
+    """
+
+    __slots__ = ("base", "octaves", "sub", "counts", "n", "total",
+                 "vmin", "vmax")
+
+    def __init__(self, base: float = 1e-5, octaves: int = 26,
+                 sub: int = 8) -> None:
+        if base <= 0 or octaves < 1 or sub < 1:
+            raise ValueError(f"bad histogram shape: base={base} "
+                             f"octaves={octaves} sub={sub}")
+        self.base = float(base)
+        self.octaves = int(octaves)
+        self.sub = int(sub)
+        self.counts = [0] * (self.octaves * self.sub)
+        self.n = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def _index(self, v: float) -> int:
+        # bucket 0 absorbs everything below base (including <= 0); the
+        # last bucket absorbs overflow — min/max stay exact regardless
+        if v < self.base:
+            return 0
+        m, e = math.frexp(v / self.base)  # v/base = m * 2**e, m in [0.5, 1)
+        k = e - 1
+        if k >= self.octaves:
+            return len(self.counts) - 1
+        minor = int((2.0 * m - 1.0) * self.sub)
+        if minor >= self.sub:  # float edge at the octave boundary
+            minor = self.sub - 1
+        return k * self.sub + minor
+
+    def bucket_bounds(self, idx: int) -> tuple[float, float]:
+        """``[lo, hi)`` value bounds of bucket ``idx`` in seconds."""
+        k, minor = divmod(idx, self.sub)
+        scale = self.base * (2.0 ** k)
+        lo = scale * (1.0 + minor / self.sub)
+        hi = scale * (1.0 + (minor + 1) / self.sub)
+        if idx == 0:
+            lo = 0.0
+        return lo, hi
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        self.counts[self._index(v)] += 1
+        self.n += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+
+    def percentile(self, q: float) -> float | None:
+        """Approximate q-th percentile in seconds (``None`` when empty)."""
+        if self.n == 0:
+            return None
+        target = q / 100.0 * self.n
+        cum = 0
+        for idx, c in enumerate(self.counts):
+            if not c:
+                continue
+            if cum + c >= target:
+                lo, hi = self.bucket_bounds(idx)
+                hi = min(hi, self.vmax)
+                lo = max(lo, min(self.vmin, hi))
+                frac = max(target - cum, 0.0) / c
+                return max(self.vmin, min(lo + frac * (hi - lo), self.vmax))
+            cum += c
+        return self.vmax
+
+    def summary(self) -> dict[str, float]:
+        """Same shape as :func:`percentiles` (histogram-derived)."""
+        if self.n == 0:
+            return {"n": 0}
+        out = {f"p{p}_ms": round(self.percentile(p) * 1e3, 3)
+               for p in (50, 95, 99)}
+        out["mean_ms"] = round(self.total / self.n * 1e3, 3)
+        out["max_ms"] = round(self.vmax * 1e3, 3)
+        out["n"] = self.n
+        return out
+
+    def cumulative_octaves(self) -> list[tuple[float, int]]:
+        """Cumulative counts at octave upper bounds (Prometheus ``le``
+        edges — one per octave keeps the exposition small and the edge
+        set identical across scrapes)."""
+        out = []
+        cum = 0
+        for k in range(self.octaves):
+            cum += sum(self.counts[k * self.sub:(k + 1) * self.sub])
+            out.append((self.base * (2.0 ** (k + 1)), cum))
+        return out
+
+
 class ServeMetrics:
     """Thread-safe recorder for one serving run.
 
     Every ``record_*`` hook may be called from the scheduler worker and
     from submitting threads concurrently; :meth:`report` may be called at
-    any time (it snapshots under the lock).
+    any time (it snapshots under the lock).  ``clock`` is the injectable
+    monotonic source for event ``t_s`` stamps (seconds relative to
+    recorder construction).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, clock: Callable[[], float] = time.monotonic) -> None:
         self._lock = threading.Lock()
-        self._latencies: list[float] = []
-        self._per_tier_latencies: dict[str, list[float]] = {}
+        self._clock = clock
+        self._t0 = clock()
+        self._lat = Log2Histogram()
+        self._per_tier_lat: dict[str, Log2Histogram] = {}
         self._tiers: dict[str, dict[str, float]] = {}
         self._switches: list[dict[str, Any]] = []
         self._rejected = 0
@@ -71,15 +200,20 @@ class ServeMetrics:
         self._pool_restarts = 0
         self._breaker_events: list[dict[str, Any]] = []
 
+    def _t_s(self) -> float:
+        return round(self._clock() - self._t0, 6)
+
     # ------------------------------------------------------------- requests
     def record_request(self, latency_s: float, *, tier: str | None = None,
                        deadline_missed: bool = False) -> None:
         with self._lock:
             self._requests += 1
-            self._latencies.append(float(latency_s))
+            self._lat.record(latency_s)
             if tier is not None:
-                self._per_tier_latencies.setdefault(tier, []).append(
-                    float(latency_s))
+                h = self._per_tier_lat.get(tier)
+                if h is None:
+                    h = self._per_tier_lat[tier] = Log2Histogram()
+                h.record(latency_s)
             if deadline_missed:
                 self._deadline_misses += 1
 
@@ -146,6 +280,7 @@ class ServeMetrics:
                       reason: str) -> None:
         with self._lock:
             self._switches.append({"batch": int(batch_seq),
+                                   "t_s": self._t_s(),
                                    "from": from_tier, "to": to_tier,
                                    "reason": reason})
 
@@ -166,8 +301,8 @@ class ServeMetrics:
         """One circuit-breaker state transition (the state timeline)."""
         with self._lock:
             self._breaker_events.append(
-                {"seq": len(self._breaker_events), "from": frm, "to": to,
-                 "reason": reason})
+                {"seq": len(self._breaker_events), "t_s": self._t_s(),
+                 "from": frm, "to": to, "reason": reason})
 
     def failures_total(self) -> dict[str, int]:
         with self._lock:
@@ -195,23 +330,28 @@ class ServeMetrics:
 
     def latency_report(self) -> dict[str, float]:
         with self._lock:
-            return percentiles(self._latencies)
+            return self._lat.summary()
 
     def report(self) -> dict[str, Any]:
         with self._lock:
             per_tier = {}
             for name, t in self._tiers.items():
                 wall = max(t["wall_s"], 1e-9)
+                h = self._per_tier_lat.get(name)
                 per_tier[name] = {
                     **{k: (round(v, 6) if isinstance(v, float) else v)
                        for k, v in t.items()},
                     "images_per_s": round(t["images"] / wall, 2),
-                    "latency_ms": percentiles(
-                        self._per_tier_latencies.get(name, ())),
+                    "latency_ms": h.summary() if h is not None else {"n": 0},
                 }
                 if t["slots"]:
                     per_tier[name]["padding_fraction"] = round(
                         1.0 - t["images"] / t["slots"], 4)
+            # shed requests never reach record_request, so the miss rate
+            # counts them explicitly on both sides of the fraction: a shed
+            # request is a missed deadline the scheduler saw coming
+            missed = self._deadline_misses + self._deadline_shed
+            served = self._requests + self._deadline_shed
             out: dict[str, Any] = {
                 "requests": self._requests,
                 "rejected": self._rejected,
@@ -222,12 +362,11 @@ class ServeMetrics:
                 "compiles_post_warmup": self._compiles_post_warmup,
                 "grid_cell_hits": dict(self._cell_hits),
                 "deadline_misses": self._deadline_misses,
-                "deadline_miss_rate": round(
-                    self._deadline_misses / max(self._requests, 1), 4),
+                "deadline_miss_rate": round(missed / max(served, 1), 4),
                 "deadline_shed": self._deadline_shed,
                 "device_wall_s": round(self._device_wall_s, 6),
                 "ingest_wall_s": round(self._ingest_wall_s, 6),
-                "latency_ms": percentiles(self._latencies),
+                "latency_ms": self._lat.summary(),
                 "per_tier": per_tier,
                 "tier_switches": list(self._switches),
                 "failures_total": dict(self._failures),
@@ -260,3 +399,117 @@ class ServeMetrics:
                     },
                 }
             return out
+
+    # ----------------------------------------------------------- exposition
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the live counters/histograms.
+
+        Counter families use ``serve_`` prefixes; latency histograms
+        expose cumulative octave-boundary ``le`` edges (stable across
+        scrapes) with exact ``_sum``/``_count``.
+        """
+        with self._lock:
+            lines: list[str] = []
+
+            def counter(name: str, help_: str,
+                        samples: list[tuple[str, float]]) -> None:
+                lines.append(f"# HELP {name} {help_}")
+                lines.append(f"# TYPE {name} counter")
+                for labels, v in samples:
+                    g = float(v)
+                    lines.append(f"{name}{labels} "
+                                 f"{int(g) if g == int(g) else g}")
+
+            counter("serve_requests_total", "Completed requests.",
+                    [("", self._requests)])
+            counter("serve_rejected_total",
+                    "Requests refused by admission control.",
+                    [("", self._rejected)])
+            counter("serve_deadline_missed_total",
+                    "Completed requests that missed their deadline.",
+                    [("", self._deadline_misses)])
+            counter("serve_deadline_shed_total",
+                    "Requests shed at dequeue (expired unserved).",
+                    [("", self._deadline_shed)])
+            counter("serve_failures_total", "Failed requests by reason.",
+                    [(f'{{reason="{r}"}}', n)
+                     for r, n in sorted(self._failures.items())] or
+                    [("", 0)])
+            counter("serve_compiles_total", "Executable compiles.",
+                    [('{phase="warmup"}',
+                      self._compiles_total - self._compiles_post_warmup),
+                     ('{phase="post_warmup"}', self._compiles_post_warmup)])
+            counter("serve_pool_restarts_total",
+                    "Ingest worker-pool respawns.",
+                    [("", self._pool_restarts)])
+            counter("serve_tier_switches_total", "QoS tier switches.",
+                    [("", len(self._switches))])
+            counter("serve_breaker_transitions_total",
+                    "Circuit-breaker state transitions.",
+                    [("", len(self._breaker_events))])
+            counter("serve_images_total", "Images served in batches.",
+                    [(f'{{tier="{n}"}}', t["images"])
+                     for n, t in sorted(self._tiers.items())] or [("", 0)])
+            counter("serve_batches_total", "Batches executed.",
+                    [(f'{{tier="{n}"}}', t["batches"])
+                     for n, t in sorted(self._tiers.items())] or [("", 0)])
+            counter("serve_device_wall_seconds_total",
+                    "Device dispatch wall.", [("", self._device_wall_s)])
+            counter("serve_ingest_wall_seconds_total",
+                    "Host entropy-decode wall.", [("", self._ingest_wall_s)])
+
+            def hist(name: str, labels: str, h: Log2Histogram) -> None:
+                sep = "," if labels else ""
+                base = labels[:-1] + sep if labels else "{"
+                for le, cum in h.cumulative_octaves():
+                    lines.append(f'{name}_bucket{base}le="{le:.6g}"}} {cum}')
+                lines.append(f'{name}_bucket{base}le="+Inf"}} {h.n}')
+                lines.append(f"{name}_sum{labels} {h.total:.9g}")
+                lines.append(f"{name}_count{labels} {h.n}")
+
+            name = "serve_request_latency_seconds"
+            lines.append(f"# HELP {name} End-to-end request latency.")
+            lines.append(f"# TYPE {name} histogram")
+            hist(name, "", self._lat)
+            for tier, h in sorted(self._per_tier_lat.items()):
+                hist(name, f'{{tier="{tier}"}}', h)
+            return "\n".join(lines) + "\n"
+
+
+class MetricsWriter:
+    """Periodic snapshot writer: ``metrics_text()`` to a file on a timer.
+
+    Writes are atomic (tmp file + ``os.replace``) so a scraper never
+    reads a torn exposition; one final snapshot lands on :meth:`close`.
+    """
+
+    def __init__(self, metrics: ServeMetrics, path: str,
+                 interval_s: float = 1.0) -> None:
+        self.metrics = metrics
+        self.path = path
+        self.interval_s = max(float(interval_s), 0.05)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name="metrics-writer", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self._write()
+
+    def _write(self) -> None:
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w") as f:
+            f.write(self.metrics.metrics_text())
+        os.replace(tmp, self.path)
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._write()
+
+    def __enter__(self) -> "MetricsWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -177,6 +177,18 @@ class TierSelector:
             self._under = 0
         return self.tier
 
+    def estimates(self) -> dict[str, float]:
+        """Point-in-time (tier, bucket) EMA snapshot, keyed
+        ``"{tier}/b{bucket}"`` (``b*`` = the wildcard cell) — the live
+        view ``health()`` exports so an operator can see what the
+        selector currently believes about each grid cell."""
+        return {
+            f"{self._names[t]}/b{'*' if b is None else b}": round(v, 6)
+            for (t, b), v in sorted(self._latency.items(),
+                                    key=lambda kv: (kv[0][0],
+                                                    kv[0][1] or 0))
+        }
+
     def note_failure(self) -> None:
         """A batch at the current tier failed (executor fault, not load).
 

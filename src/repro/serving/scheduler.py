@@ -70,6 +70,7 @@ from repro.serving.grid import PlanGrid
 from repro.serving.ladder import PlanLadder
 from repro.serving.metrics import ServeMetrics
 from repro.serving.qos import QosPolicy, TierSelector
+from repro.serving.trace import NULL_TRACER, NullTracer, Tracer
 
 __all__ = ["DeadlineExceeded", "RequestFailed", "SchedulerClosed",
            "ServeRequest", "ServiceUnavailable", "BandElasticScheduler"]
@@ -117,7 +118,8 @@ class ServeRequest:
     """
 
     __slots__ = ("rid", "kind", "payload", "deadline", "submitted",
-                 "tier", "latency_s", "_event", "_result", "_error")
+                 "t_enq", "tier", "latency_s", "_event", "_result",
+                 "_error")
 
     def __init__(self, rid: int, kind: str, payload: Any,
                  deadline: float | None):
@@ -126,6 +128,7 @@ class ServeRequest:
         self.payload = payload
         self.deadline = deadline          # absolute monotonic seconds
         self.submitted = time.monotonic()
+        self.t_enq = self.submitted       # tracer-clock enqueue time
         self.tier: str | None = None      # tier name that served it
         self.latency_s: float | None = None
         self._event = threading.Event()
@@ -197,7 +200,8 @@ class BandElasticScheduler:
                  donate: bool = True,
                  breaker: CircuitBreaker | BreakerPolicy | None = None,
                  faults=None,
-                 executor_retries: int = 1):
+                 executor_retries: int = 1,
+                 tracer: Tracer | NullTracer | None = None):
         if batch < 1:
             raise ValueError("batch must be >= 1")
         if executor_retries < 0:
@@ -215,14 +219,18 @@ class BandElasticScheduler:
         self.channels = channels
         self.quality = ladder.base.spec.quality
         self._warmed = False
+        # the flight recorder: NULL_TRACER keeps every call site
+        # unconditional, and hot paths guard on `tracer.enabled`
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # service-level failure breaker (codec errors never feed it); a
         # prebuilt CircuitBreaker is taken as-is, a BreakerPolicy (or
         # None = defaults) builds one wired into the metrics timeline
+        # and the trace instant stream
         if isinstance(breaker, CircuitBreaker):
             self.breaker = breaker
         else:
             self.breaker = CircuitBreaker(
-                breaker, on_transition=self.metrics.record_breaker)
+                breaker, on_transition=self._on_breaker)
         self.faults = faults          # FaultInjector | None (tests only)
         self.executor_retries = executor_retries
         from repro.codec import ingest as _ingestlib
@@ -237,14 +245,14 @@ class BandElasticScheduler:
         self.grid_engine = PlanGrid(
             ladder, batch=batch, buckets=buckets, grid=grid,
             channels=channels, executor=executor, donate=donate,
-            on_compile=self._note_compile)
+            on_compile=self._note_compile, tracer=self.tracer)
         self.buckets = self.grid_engine.buckets
         self._execs = self.grid_engine.columns
         self.tier_names = [t.name for t in ladder.tiers]
 
         self.selector = TierSelector(
             len(ladder.tiers), policy, tier_names=self.tier_names,
-            on_switch=self.metrics.record_switch)
+            on_switch=self._on_switch)
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -284,6 +292,8 @@ class BandElasticScheduler:
                              f"(expected one of {KINDS})")
         if kind == "bytes" and self.grid is None:
             raise ValueError("bytes ingest needs grid= at construction")
+        tr = self.tracer
+        t_sub = tr.now() if tr.enabled else 0.0
         with self._lock:
             if self._error is not None:
                 raise self._error
@@ -291,14 +301,24 @@ class BandElasticScheduler:
                 raise SchedulerClosed("scheduler is closed")
             if not self.breaker.allow():
                 self.metrics.record_failure("rejected-open-breaker")
+                if tr.enabled:
+                    tr.instant("scheduler", "reject",
+                               args={"reason": "breaker-open"})
                 raise ServiceUnavailable(
                     "circuit breaker open — service unhealthy, retry later")
             if self._pending_locked() >= self.max_pending:
                 self.metrics.record_rejected()
+                if tr.enabled:
+                    tr.instant("scheduler", "reject",
+                               args={"reason": "queue-full"})
                 return None
             req = ServeRequest(next(self._rid), kind, payload,
                                None if deadline_s is None
                                else time.monotonic() + deadline_s)
+            if tr.enabled:
+                req.t_enq = tr.now()
+                tr.span("request", "admission", t_sub, req.t_enq,
+                        tid=req.rid, args={"kind": kind})
             self._queues[kind].append(req)
             self._work.notify_all()  # worker and ingest thread both wait
             return req
@@ -335,6 +355,7 @@ class BandElasticScheduler:
             "breaker": self.breaker.snapshot(),
             "failures_total": self.metrics.failures_total(),
             "pool_restarts": self.metrics.pool_restarts(),
+            "qos_estimates": self.selector.estimates(),
             "queues": queues,
             "in_flight": in_flight,
             "worker_alive": self._worker.is_alive(),
@@ -348,6 +369,28 @@ class BandElasticScheduler:
         compile.  After :meth:`warmup` the shape set is closed, so any
         further firing is a mid-traffic compile the report must show."""
         self.metrics.record_compile(cell, post_warmup=self._warmed)
+        if self._warmed and self.tracer.enabled:
+            # only post-warmup compiles are anomalies worth a timeline
+            # mark; the warmup sweep would just flood the ring
+            self.tracer.instant("device", "compile",
+                                args={"cell": cell, "post_warmup": True})
+
+    def _on_switch(self, batch_seq: int, from_tier: str, to_tier: str,
+                   reason: str) -> None:
+        """QoS tier switch: metrics timeline + trace instant."""
+        self.metrics.record_switch(batch_seq, from_tier, to_tier, reason)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "scheduler", "tier-switch",
+                args={"from": from_tier, "to": to_tier, "reason": reason})
+
+    def _on_breaker(self, frm: str, to: str, reason: str) -> None:
+        """Circuit-breaker transition: metrics timeline + trace instant."""
+        self.metrics.record_breaker(frm, to, reason)
+        if self.tracer.enabled:
+            self.tracer.instant("scheduler", "breaker",
+                                args={"from": frm, "to": to,
+                                      "reason": reason})
 
     def warmup(self, kinds=KINDS) -> None:
         """Sweep the whole plan grid: compile every (kind × bucket × tier)
@@ -456,18 +499,39 @@ class BandElasticScheduler:
                     with self._idle:
                         self._idle.notify_all()
                     continue
+                tr = self.tracer
+                on_shard = None
+                if tr.enabled:
+                    rids = [r.rid for r in reqs]
+
+                    def on_shard(indices, ta, tb, _rids=rids):
+                        # one spawn-pool shard of this batch (tid = the
+                        # shard's first batch index, which is its shard
+                        # number under the i::workers striping)
+                        tr.span("ingest", "decode-shard", ta, tb,
+                                tid=1 + (indices[0] if indices else 0),
+                                args={"rids": [_rids[j] for j in indices]})
+
                 t0 = time.monotonic()
+                t0s = tr.now() if tr.enabled else 0.0
                 try:
                     if self.faults is not None:
                         self.faults.on_ingest(reqs)
                     coef, stats, errors = ingestlib.ingest_batch(
                         [r.payload for r in reqs], quality=self.quality,
                         grid=self.grid, channels=self.channels,
-                        on_error="isolate")
+                        on_error="isolate", on_shard=on_shard)
                 except Exception as e:
                     # decode infrastructure died under the whole batch —
                     # fail these requests, keep the thread serving
                     self._note_pool_restarts(ingestlib)
+                    if tr.enabled:
+                        t = tr.now()
+                        for r in reqs:
+                            tr.span("request", "queue", r.t_enq, t,
+                                    tid=r.rid)
+                            tr.instant("request", "fail", t=t, tid=r.rid,
+                                       args={"stage": "ingest"})
                     for r in reqs:
                         r._fail(RequestFailed("ingest", r.rid, e))
                     self.metrics.record_failure("ingest", len(reqs))
@@ -479,9 +543,21 @@ class BandElasticScheduler:
                         self._idle.notify_all()
                     continue
                 wall = time.monotonic() - t0
+                if tr.enabled:
+                    tr.span("ingest", "ingest-decode", t0s, tr.now(),
+                            args={"n": len(reqs),
+                                  "rids": [r.rid for r in reqs]})
                 self._note_pool_restarts(ingestlib)
                 self.metrics.record_ingest(stats)
                 if errors:
+                    if tr.enabled:
+                        t = tr.now()
+                        for i in errors:
+                            tr.span("request", "queue", reqs[i].t_enq, t,
+                                    tid=reqs[i].rid)
+                            tr.instant("request", "fail", t=t,
+                                       tid=reqs[i].rid,
+                                       args={"stage": "codec"})
                     for i, err in errors.items():
                         r = reqs[i]
                         r._fail(RequestFailed("codec", r.rid, err))
@@ -539,13 +615,22 @@ class BandElasticScheduler:
         if delta > 0:
             self._pool_seen = now
             self.metrics.record_pool_restarts(delta)
+            if self.tracer.enabled:
+                self.tracer.instant("ingest", "pool-restart",
+                                    args={"restarts": delta})
 
     def _shed(self, shed: list[ServeRequest]) -> None:
         if not shed:
             return
         self.metrics.record_deadline_shed(len(shed))
         self.metrics.record_failure("deadline", len(shed))
+        tr = self.tracer
+        t = tr.now() if tr.enabled else 0.0
         for r in shed:
+            if tr.enabled:
+                # close the chain: time-in-queue span, then the terminal
+                tr.span("request", "queue", r.t_enq, t, tid=r.rid)
+                tr.instant("request", "shed", t=t, tid=r.rid)
             r._fail(DeadlineExceeded(
                 f"request {r.rid} expired before dispatch"))
 
@@ -629,6 +714,14 @@ class BandElasticScheduler:
                         self._in_flight = 0
                         self._idle.notify_all()
                     continue
+                tr = self.tracer
+                t_take = tr.now() if tr.enabled else 0.0
+                if tr.enabled:
+                    # queue span closes here for the whole batch — once,
+                    # before the retry loop, so retries don't duplicate it
+                    for r in reqs:
+                        tr.span("request", "queue", r.t_enq, t_take,
+                                tid=r.rid)
                 seq = self._dispatch_seq
                 self._dispatch_seq += 1
                 err: Exception | None = None
@@ -636,7 +729,8 @@ class BandElasticScheduler:
                     try:
                         if self.faults is not None:
                             self.faults.on_execute(seq, reqs)
-                        self._execute(reqs, tier_ix, depth, decoded)
+                        self._execute(reqs, tier_ix, depth, decoded,
+                                      t_take=t_take)
                         err = None
                         break
                     except Exception as e:  # transient? bounded retry
@@ -650,6 +744,11 @@ class BandElasticScheduler:
                 else:
                     # retry budget exhausted: fail only this batch — the
                     # scheduler survives, the breaker accumulates
+                    if tr.enabled:
+                        t = tr.now()
+                        for r in reqs:
+                            tr.instant("request", "fail", t=t, tid=r.rid,
+                                       args={"stage": "executor"})
                     for r in reqs:
                         r._fail(RequestFailed("executor", r.rid, err))
                     self.metrics.record_failure("executor", len(reqs))
@@ -665,13 +764,19 @@ class BandElasticScheduler:
                        record=False)
 
     def _execute(self, reqs: list[ServeRequest], tier_ix: int,
-                 depth: int, decoded=None) -> None:
+                 depth: int, decoded=None, t_take: float = 0.0) -> None:
         ex = self._execs[tier_ix]
         name = self.tier_names[tier_ix]
         n = len(reqs)
         bucket = self.grid_engine.bucket_for(n)
+        tr = self.tracer
+        rids = [r.rid for r in reqs] if tr.enabled else None
+        # rids ride along only when tracing: untraced dispatch keeps the
+        # bare executor signature (tests monkeypatch coef_fn/packed_fn)
+        kw = {"rids": rids} if tr.enabled else {}
         ingest_wall = None
         t0 = time.monotonic()
+        t0s = tr.now() if tr.enabled else 0.0
         if reqs[0].kind == "bytes":
             from repro.codec import ingest as ingestlib
 
@@ -682,12 +787,27 @@ class BandElasticScheduler:
             coef, ingest_wall = decoded
             kind = "bytes"
             logits = np.asarray(ex.packed_fn(
-                ingestlib.pack_tiles(coef, ex.w_in)))
+                ingestlib.pack_tiles(coef, ex.w_in), **kw))
         else:
             kind = "coefficients"
             logits = np.asarray(ex.coef_fn(np.stack(
-                [np.asarray(r.payload, np.float32) for r in reqs])))
+                [np.asarray(r.payload, np.float32) for r in reqs]), **kw))
         wall = time.monotonic() - t0
+        if tr.enabled:
+            t1s = tr.now()
+            # batch-form covers take -> dispatch start (tier selection +
+            # tile packing); device-dispatch is exactly the interval the
+            # report's device_wall_s accumulates, so span sums reconcile
+            tr.span("scheduler", "batch-form", t_take, t0s,
+                    args={"tier": name, "n": n, "bucket": bucket,
+                          "kind": kind})
+            tr.span("device", "device-dispatch", t0s, t1s,
+                    args={"tier": name, "n": n, "bucket": bucket,
+                          "kind": kind, "rids": rids})
+            for r in reqs:
+                # flow arrow: this request's queue row -> its batch slice
+                tr.flow(r.rid, ("request", r.rid, t_take),
+                        ("device", 0, t0s))
         # only device wall reaches the QoS EMA: host decode cost is
         # band-independent, so folding it in would poison tier selection
         self.selector.observe(tier_ix, wall, bucket=bucket)
@@ -695,8 +815,12 @@ class BandElasticScheduler:
                                   ingest_s=ingest_wall, slots=bucket,
                                   cell=f"{name}/{kind}/b{bucket}")
         now = time.monotonic()
+        t_now = tr.now() if tr.enabled else 0.0
         for i, r in enumerate(reqs):
             r._complete(logits[i], name)
+            if tr.enabled:
+                tr.instant("request", "complete", t=t_now, tid=r.rid,
+                           args={"tier": name})
             self.metrics.record_request(
                 r.latency_s, tier=name,
                 deadline_missed=(r.deadline is not None

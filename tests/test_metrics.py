@@ -1,0 +1,265 @@
+"""Serving metrics storage (``repro.serving.metrics``).
+
+Contracts:
+
+* **log₂ histograms are O(1)-memory percentile sketches** — exact
+  ``n``/``sum``/``min``/``max``; p50/p95/p99 within one bucket width of
+  the exact list-based :func:`percentiles` (the golden test);
+* **ServeMetrics is thread-safe** — N hammering threads never lose a
+  count and ``report()`` can interleave with recording;
+* **deadline_miss_rate counts shed requests** — a request shed at
+  dequeue is a missed deadline even though it never completed;
+* **event timelines carry injectable-clock ``t_s`` stamps**;
+* **metrics_text() is valid Prometheus exposition** with stable ``le``
+  edges and exact ``_sum``/``_count``.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import serving as SV
+from repro.serving.metrics import Log2Histogram, MetricsWriter, percentiles
+
+
+# --------------------------------------------------------------------------
+# Log2Histogram
+# --------------------------------------------------------------------------
+
+
+def test_histogram_empty():
+    h = Log2Histogram()
+    assert h.summary() == {"n": 0}
+    assert h.percentile(50) is None
+
+
+def test_histogram_single_sample_is_exact():
+    h = Log2Histogram()
+    h.record(0.125)
+    s = h.summary()
+    assert s["n"] == 1
+    # with one sample every percentile collapses to it (vmin == vmax)
+    assert s["p50_ms"] == s["p99_ms"] == s["max_ms"] == 125.0
+    assert s["mean_ms"] == 125.0
+
+
+def test_histogram_exact_aggregates():
+    h = Log2Histogram()
+    xs = [0.001, 0.010, 0.500, 7.0, 0.0042]
+    for v in xs:
+        h.record(v)
+    assert h.n == 5
+    assert h.total == pytest.approx(sum(xs))
+    assert h.vmin == pytest.approx(min(xs))
+    assert h.vmax == pytest.approx(max(xs))
+
+
+def test_histogram_underflow_and_overflow_buckets():
+    h = Log2Histogram(base=1e-5, octaves=26, sub=8)
+    h.record(0.0)          # <= 0: bucket 0
+    h.record(-1.0)         # negative: bucket 0, min stays exact
+    h.record(1e-9)         # below base: bucket 0
+    h.record(1e9)          # beyond the last octave: last bucket
+    assert h.counts[0] == 3
+    assert h.counts[-1] == 1
+    assert h.vmin == -1.0 and h.vmax == 1e9
+    # percentiles stay inside the observed range even for the absorbers
+    assert -1.0 <= h.percentile(50) <= 1e9
+
+
+def test_histogram_bucket_boundaries_route_consistently():
+    """A value on an exact bucket edge lands in the bucket whose
+    half-open range [lo, hi) contains it."""
+    h = Log2Histogram(base=1e-5, octaves=26, sub=8)
+    for v in (1e-5, 2e-5, 4e-5, 1e-5 * (1 + 1 / 8), 0.1, 1.0, 3.3):
+        idx = h._index(v)
+        lo, hi = h.bucket_bounds(idx)
+        assert lo <= v < hi or (idx == len(h.counts) - 1 and v >= lo), \
+            f"v={v} idx={idx} bounds=({lo}, {hi})"
+
+
+def test_histogram_index_monotone():
+    h = Log2Histogram()
+    vals = np.geomspace(1e-6, 500.0, 4000)
+    idxs = [h._index(float(v)) for v in vals]
+    assert idxs == sorted(idxs)
+    assert max(idxs) < len(h.counts)
+
+
+def test_histogram_percentiles_match_exact_within_one_bucket():
+    """The golden test: histogram p50/p95/p99 vs list-based percentiles
+    on lognormal latencies — error bounded by one bucket width."""
+    rng = np.random.default_rng(0)
+    xs = np.exp(rng.normal(np.log(0.050), 1.0, 5000))  # ~50ms lognormal
+    h = Log2Histogram()
+    for v in xs:
+        h.record(float(v))
+    exact = percentiles(xs)
+    approx = h.summary()
+    assert approx["n"] == exact["n"] == 5000
+    assert approx["mean_ms"] == pytest.approx(exact["mean_ms"], rel=1e-6)
+    assert approx["max_ms"] == pytest.approx(exact["max_ms"], rel=1e-6)
+    for key in ("p50_ms", "p95_ms", "p99_ms"):
+        got, want = approx[key], exact[key]
+        lo, hi = h.bucket_bounds(h._index(want / 1e3))
+        width_ms = (hi - lo) * 1e3
+        assert abs(got - want) <= width_ms, \
+            f"{key}: {got} vs {want} (bucket width {width_ms:.3f}ms)"
+
+
+def test_histogram_cumulative_octaves_monotone_and_complete():
+    h = Log2Histogram()
+    for v in (0.001, 0.002, 0.004, 0.1, 2.0):
+        h.record(v)
+    edges = h.cumulative_octaves()
+    assert len(edges) == h.octaves
+    les = [le for le, _ in edges]
+    cums = [c for _, c in edges]
+    assert les == sorted(les)
+    assert cums == sorted(cums)
+    assert cums[-1] == h.n
+
+
+def test_histogram_shape_validation():
+    with pytest.raises(ValueError):
+        Log2Histogram(base=0.0)
+    with pytest.raises(ValueError):
+        Log2Histogram(octaves=0)
+    with pytest.raises(ValueError):
+        Log2Histogram(sub=0)
+
+
+# --------------------------------------------------------------------------
+# ServeMetrics
+# --------------------------------------------------------------------------
+
+
+def test_latency_report_matches_histogram():
+    m = SV.ServeMetrics()
+    for v in (0.010, 0.020, 0.030, 0.100):
+        m.record_request(v, tier="top")
+    m.record_batch("top", 4, 0.1)  # per_tier rows key off served batches
+    rep = m.report()
+    assert rep["latency_ms"]["n"] == 4
+    assert rep["per_tier"]["top"]["latency_ms"]["n"] == 4
+    assert rep["latency_ms"]["max_ms"] == pytest.approx(100.0)
+
+
+def test_deadline_miss_rate_counts_shed():
+    """3 completed (1 missed) + 1 shed → 2 misses over 4 requests."""
+    m = SV.ServeMetrics()
+    m.record_request(0.010)
+    m.record_request(0.020, deadline_missed=True)
+    m.record_request(0.030)
+    m.record_deadline_shed()
+    rep = m.report()
+    assert rep["requests"] == 3
+    assert rep["deadline_misses"] == 1
+    assert rep["deadline_shed"] == 1
+    assert rep["deadline_miss_rate"] == pytest.approx(0.5)
+
+
+def test_deadline_miss_rate_zero_requests():
+    assert SV.ServeMetrics().report()["deadline_miss_rate"] == 0.0
+
+
+def test_event_timelines_stamped_with_injected_clock():
+    t = [100.0]
+    m = SV.ServeMetrics(clock=lambda: t[0])
+    t[0] = 101.5
+    m.record_switch(3, "top", "b32", "queue depth 9")
+    t[0] = 104.25
+    m.record_breaker("closed", "open", "executor storm")
+    rep = m.report()
+    assert rep["tier_switches"][0]["t_s"] == pytest.approx(1.5)
+    assert rep["breaker_timeline"][0]["t_s"] == pytest.approx(4.25)
+    assert rep["breaker_timeline"][0]["seq"] == 0
+
+
+def test_concurrent_recording_never_loses_counts():
+    """8 threads hammer every hook; totals must be exact and report()
+    must be callable mid-storm without tearing."""
+    m = SV.ServeMetrics()
+    n_threads, per_thread = 8, 500
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            m.report()
+            m.metrics_text()
+
+    def writer(k):
+        for i in range(per_thread):
+            m.record_request(0.001 * (i % 50 + 1), tier=f"t{k % 2}",
+                             deadline_missed=(i % 10 == 0))
+            m.record_batch(f"t{k % 2}", 2, 0.001, slots=4, cell="c")
+            m.record_failure("codec")
+            m.record_rejected()
+
+    rt = threading.Thread(target=reader, daemon=True)
+    rt.start()
+    ts = [threading.Thread(target=writer, args=(k,))
+          for k in range(n_threads)]
+    for th in ts:
+        th.start()
+    for th in ts:
+        th.join()
+    stop.set()
+    rt.join(timeout=10)
+    total = n_threads * per_thread
+    rep = m.report()
+    assert rep["requests"] == total
+    assert rep["latency_ms"]["n"] == total
+    assert rep["rejected"] == total
+    assert rep["failures_total"]["codec"] == total
+    assert rep["deadline_misses"] == total // 10
+    assert sum(t["images"] for t in rep["per_tier"].values()) == 2 * total
+    assert sum(h.n for h in m._per_tier_lat.values()) == total
+
+
+# --------------------------------------------------------------------------
+# Prometheus exposition
+# --------------------------------------------------------------------------
+
+
+def test_metrics_text_exposition():
+    m = SV.ServeMetrics()
+    m.record_request(0.010, tier="top")
+    m.record_request(0.500, tier="top", deadline_missed=True)
+    m.record_batch("top", 2, 0.050, slots=4, cell="top/b4")
+    m.record_failure("codec", 2)
+    m.record_compile("top/b4")
+    text = m.metrics_text()
+    assert "# TYPE serve_requests_total counter" in text
+    assert "serve_requests_total 2" in text
+    assert 'serve_failures_total{reason="codec"} 2' in text
+    assert 'serve_compiles_total{phase="warmup"} 1' in text
+    assert 'serve_images_total{tier="top"} 2' in text
+    assert "serve_device_wall_seconds_total 0.05" in text
+    assert "# TYPE serve_request_latency_seconds histogram" in text
+    assert 'serve_request_latency_seconds_bucket{le="+Inf"} 2' in text
+    assert 'serve_request_latency_seconds_bucket{tier="top",le="+Inf"} 2' \
+        in text
+    assert "serve_request_latency_seconds_count 2" in text
+    assert "serve_request_latency_seconds_sum 0.51" in text
+    # cumulative le edges are monotone in count
+    cums = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+            if line.startswith('serve_request_latency_seconds_bucket{le=')]
+    assert cums == sorted(cums) and cums[-1] == 2
+
+
+def test_metrics_writer_snapshots_and_final_write(tmp_path):
+    m = SV.ServeMetrics()
+    m.record_request(0.010)
+    path = tmp_path / "metrics.prom"
+    with MetricsWriter(m, str(path), interval_s=0.05) as w:
+        deadline = 100
+        while not path.exists() and deadline:
+            threading.Event().wait(0.05)
+            deadline -= 1
+        assert path.exists(), "periodic snapshot never landed"
+        m.record_request(0.020)
+    # close() wrote a final snapshot including the late sample
+    text = path.read_text()
+    assert "serve_requests_total 2" in text
+    assert not (tmp_path / "metrics.prom.tmp").exists()
