@@ -265,6 +265,27 @@ def _run_plan(emit, params, state, coef, batch, iters, modes, mode_tag):
              f"{t_plan / t_comp:.2f}x over plan walk (fused blocks, packed "
              f"operators, top1_agree={agree:.3f})", speedup=t_plan / t_comp)
 
+        # introspection cross-check (informational, unguarded prefixes):
+        # per-block predicted-vs-measured over the same compiled schedule
+        # — the roofline model's disagreement trends across PRs alongside
+        # the guarded speedups
+        from repro import introspect
+
+        rep = introspect.predicted_vs_measured(cp, coef, iters=iters)
+        for b in rep["blocks"]:
+            r = b["ratio"]
+            emit(f"fig5/introspect_{b['name']}", b["measured_us"] or 0.0,
+                 f"pred_us={b['predicted_us']:.1f} "
+                 f"ratio={'' if r is None else f'{r:.2f}'} "
+                 f"term={b['term']} exec={b['executor']} "
+                 f"bands={b['bands_out']}")
+        wr = introspect.worst_ratio(rep)
+        t = rep["totals"]
+        emit("fig5/predicted_vs_measured_worst_ratio_compiled", 0.0,
+             f"{wr:.2f}x worst per-block |predicted vs measured| "
+             f"(reconciliation={t['reconciliation']:.3f}, "
+             f"logits_match={t['logits_match']})")
+
 
 def _run_ingest(emit, params, state, coef, batch, iters):
     # ---- bytes → logits: the compressed-ingest serving path ---------------
@@ -581,12 +602,12 @@ def _run_grid(emit, coef, reduced):
     flat = [i for p in phases for i in p]
     n_req = len(flat)
 
-    def run_config(buckets):
+    def run_config(buckets, profile=False):
         metrics = sv.ServeMetrics()
         sched = sv.BandElasticScheduler(
             ladder, batch=slots, metrics=metrics, max_pending=n_req,
             grid=grid, channels=coef.shape[3], buckets=buckets)
-        reqs = []
+        reqs, pg = [], None
         with sched:
             sched.warmup(kinds=("coefficients",))
             t0 = time.perf_counter()
@@ -597,10 +618,17 @@ def _run_grid(emit, coef, reduced):
                 reqs += batch_reqs
             sched.drain()
             wall = time.perf_counter() - t0
-        return reqs, wall, metrics.report()
+            if profile:
+                # after the timed window, on the warmed grid (captured
+                # executables only — no post-warmup compiles recorded)
+                from repro import introspect
 
-    fx_reqs, fx_wall, fx_rep = run_config((slots,))  # pre-grid pad-to-max
-    gd_reqs, gd_wall, gd_rep = run_config(None)      # aphrodite schedule
+                pg = introspect.profile_plan_grid(sched.grid_engine,
+                                                  iters=2)
+        return reqs, wall, metrics.report(), pg
+
+    fx_reqs, fx_wall, fx_rep, _ = run_config((slots,))  # pad-to-max
+    gd_reqs, gd_wall, gd_rep, pg = run_config(None, profile=True)
 
     # fidelity gate: bucket padding must be inert — every grid-served
     # request agrees with the per-layer plan walk's top-1 on its image
@@ -624,6 +652,17 @@ def _run_grid(emit, coef, reduced):
          f"→{gd_rep['padding_fraction']:.2f}, "
          f"{gd_rep['compiles_post_warmup']} post-warmup compiles, "
          f"top1_agree={agree:.3f})", speedup=tp_g / tp_f)
+    # informational: roofline disagreement across the warmed grid's
+    # reference cells (per-block, measured on the captured executables)
+    from repro import introspect
+
+    wr = introspect.worst_ratio({"blocks": [b for c in pg["columns"]
+                                            for b in c["blocks"]]})
+    caps = " ".join(f"{c['cell']}={c['predicted_req_s']:.0f}rps"
+                    for c in pg["cells"][:4])
+    emit("fig5/predicted_vs_measured_worst_ratio_grid", 0.0,
+         f"{wr:.2f}x worst per-block |predicted vs measured| over "
+         f"{len(pg['columns'])} reference cells ({caps})")
 
 
 def _run_train(emit, params, state, coef, y, batch):

@@ -11,6 +11,12 @@ come straight out of the trip-count-aware analyzer).  Also reported:
 MODEL_FLOPS = 6·N(active)·D (train) / 2·N·D (inference) and the useful-
 compute ratio MODEL_FLOPS / (HLO_FLOPs × devices), plus the dominant term
 and a rule-derived note on what would move it.
+
+The hardware peaks live in :mod:`repro.introspect.roofline` (one registry
+for this benchmark, ``launch.inspect``, and ``serve --profile-grid``);
+this module keeps the dry-run artifacts on the TPU v5e profile by
+default — the artifacts describe TPU modules regardless of the analysis
+host — overridable via ``$JPEG_HW_PROFILE``.
 """
 from __future__ import annotations
 
@@ -19,10 +25,12 @@ import json
 import os
 
 from repro.configs.base import SHAPES, get_config
+from repro.introspect.roofline import resolve_profile, roofline
 
-PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
-HBM_BW = 819e9           # bytes/s per chip
-LINK_BW = 50e9           # bytes/s per ICI link (assume 1 link-equivalent)
+_PROFILE = resolve_profile(default="tpu-v5e")
+PEAK_FLOPS = _PROFILE.peak_flops
+HBM_BW = _PROFILE.hbm_bw
+LINK_BW = _PROFILE.link_bw
 
 ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "artifacts", "dryrun")
@@ -134,14 +142,16 @@ def rows(mesh_filter: str | None = None) -> list[dict]:
             continue
         hc = r["hlo_cost"]
         n_dev = r["devices"]
-        compute_s = hc["flops"] / PEAK_FLOPS
         # Memory term: trip-count-aware, TPU-fusion-modeled bytes (see
         # repro.launch.hlo_analysis — non-fusable ops' operands+outputs).
-        memory_s = hc["bytes"] / HBM_BW
-        coll_s = hc["collective_bytes"] / LINK_BW
+        roof = roofline(hc["flops"], hc["bytes"], hc["collective_bytes"],
+                        _PROFILE)
+        compute_s = roof["compute_s"]
+        memory_s = roof["memory_s"]
+        coll_s = roof["collective_s"]
         terms = {"compute": compute_s, "memory": memory_s,
                  "collective": coll_s}
-        bottleneck = max(terms, key=terms.get)
+        bottleneck = roof["term"]
         mf = model_flops(cfg, shape)
         ratio = (mf / (hc["flops"] * n_dev)) if mf else None
         frac = compute_s / max(terms.values()) if max(terms.values()) else 0.0

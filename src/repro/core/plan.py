@@ -740,7 +740,8 @@ def _apply_layers_block(blk: CompiledBlock, h: jnp.ndarray, phi: int,
 
 def apply_compiled(cp: CompiledPlan, coef: jnp.ndarray,
                    cfg: dispatchlib.DispatchConfig | None = None, *,
-                   executor: str | None = None) -> jnp.ndarray:
+                   executor: str | None = None,
+                   profile: "StepProfile | None" = None) -> jnp.ndarray:
     """Execute the compiled schedule: packed stem, then one fused (or
     fallback) step per residual block, then the DC-read head.
 
@@ -758,8 +759,17 @@ def apply_compiled(cp: CompiledPlan, coef: jnp.ndarray,
     packed widths — this is the executor whose latency the §6 band knob
     actually moves, hence what the band-elastic serving ladder runs
     off-TPU.
+
+    ``profile`` (a :class:`StepProfile`) switches to the profiling
+    execution mode: the identical schedule runs step by step with
+    device synchronization around each step, per-step walls accumulate
+    on the profile object, and the returned logits are bit-identical to
+    the unprofiled walk (same step closures, same order).
     """
     cfg = cp.cfg if cfg is None else cfg
+    if profile is not None:
+        return _apply_profiled(cp, coef, cfg, executor, profile,
+                               packed=False)
     path = (cp.meta or {}).get("path", "reference")
     h = _apply_stem(cp.stem, coef, cp.phi, path, cfg, executor)
     return _run_blocks(cp, h, cfg, executor)
@@ -767,7 +777,9 @@ def apply_compiled(cp: CompiledPlan, coef: jnp.ndarray,
 
 def apply_compiled_packed(cp: CompiledPlan, packed: jnp.ndarray,
                           cfg: dispatchlib.DispatchConfig | None = None, *,
-                          executor: str | None = None) -> jnp.ndarray:
+                          executor: str | None = None,
+                          profile: "StepProfile | None" = None
+                          ) -> jnp.ndarray:
     """Execute the compiled schedule from a **tile-packed** stem input.
 
     ``packed`` is ``(N, bh, bw, Cin·w_in)`` with ``w_in =
@@ -777,8 +789,13 @@ def apply_compiled_packed(cp: CompiledPlan, packed: jnp.ndarray,
     Identical logits to :func:`apply_compiled` on the corresponding
     full-width batch: every stem executor reads at most ``w_in ≥
     stem.bands`` zigzag lanes per channel, so the packing drops nothing.
+
+    ``profile`` behaves as on :func:`apply_compiled`.
     """
     cfg = cp.cfg if cfg is None else cfg
+    if profile is not None:
+        return _apply_profiled(cp, packed, cfg, executor, profile,
+                               packed=True)
     path = (cp.meta or {}).get("path", "reference")
     st = cp.stem
     n, bh, bw, k = packed.shape
@@ -867,16 +884,15 @@ def capture_compiled(cp: CompiledPlan, shape, *, packed: bool = False,
     return call
 
 
-def _run_blocks(cp: CompiledPlan, h: jnp.ndarray,
-                cfg: dispatchlib.DispatchConfig,
-                executor: str | None = None) -> jnp.ndarray:
-    """Shared post-stem walk: fused/fallback steps, DC-read head."""
+def _make_block_fn(blk: CompiledBlock, w_prev: int, phi: int,
+                   cfg: dispatchlib.DispatchConfig,
+                   executor: str | None):
+    """One schedule step: (optional width repack into the block, then)
+    the fused/fallback block body, then the batch-axis shard hint."""
     from repro.kernels import fused_block as fblib
 
-    cur_w = cp.stem.w_out
-    h = shard(h, "batch", None, None, None)
-    for blk in cp.blocks:
-        if blk.w_in != cur_w:
+    def fn(h):
+        if blk.w_in != w_prev:
             h = _repack_width(h, blk.cin, blk.w_in)
         if blk.kind == "fused":
             if executor == "gemm":
@@ -884,15 +900,167 @@ def _run_blocks(cp: CompiledPlan, h: jnp.ndarray,
                                                 blk.conv2, blk.asm_out,
                                                 blk.proj)
             else:
-                h = dispatchlib.fused_block(h, blk, cp.phi, path=blk.path,
+                h = dispatchlib.fused_block(h, blk, phi, path=blk.path,
                                             cfg=cfg)
         else:
-            h = _apply_layers_block(blk, h, cp.phi, cfg)
+            h = _apply_layers_block(blk, h, phi, cfg)
+        return shard(h, "batch", None, None, None)
+
+    return fn
+
+
+def _make_head_fn(cp: CompiledPlan, w: int):
+    def fn(h):
+        dc = h[..., 0::w]  # per-channel DC lanes of the packed layout
+        pooled = jnp.mean(dc, axis=(1, 2)) / bnlib.DC_GAIN
+        return pooled @ cp.head_w + cp.head_b
+
+    return fn
+
+
+def _block_steps(cp: CompiledPlan, cfg: dispatchlib.DispatchConfig,
+                 executor: str | None):
+    """The post-stem schedule as an explicit ``(name, fn)`` list: one fn
+    per residual block plus the DC-read head.  :func:`_run_blocks` folds
+    exactly this list, so a per-step walk (profiling, attribution) runs
+    the same traced operations as the whole-schedule execution."""
+    steps = []
+    cur_w = cp.stem.w_out
+    for blk in cp.blocks:
+        steps.append((blk.name, _make_block_fn(blk, cur_w, cp.phi, cfg,
+                                               executor)))
         cur_w = blk.w_out
-        h = shard(h, "batch", None, None, None)
-    dc = h[..., 0::cur_w]  # per-channel DC lanes of the packed layout
-    pooled = jnp.mean(dc, axis=(1, 2)) / bnlib.DC_GAIN
-    return pooled @ cp.head_w + cp.head_b
+    steps.append(("head", _make_head_fn(cp, cur_w)))
+    return steps
+
+
+def _run_blocks(cp: CompiledPlan, h: jnp.ndarray,
+                cfg: dispatchlib.DispatchConfig,
+                executor: str | None = None) -> jnp.ndarray:
+    """Shared post-stem walk: fused/fallback steps, DC-read head."""
+    h = shard(h, "batch", None, None, None)
+    for _name, fn in _block_steps(cp, cfg, executor):
+        h = fn(h)
+    return h
+
+
+def compiled_steps(cp: CompiledPlan,
+                   cfg: dispatchlib.DispatchConfig | None = None, *,
+                   executor: str | None = None, packed: bool = False):
+    """The full compiled schedule as an explicit ``(name, fn)`` step
+    list: ``stem`` (coefficients — or the tile-packed stem layout with
+    ``packed=True`` — to packed activations), one step per residual
+    block, and ``head`` (packed activations to logits).
+
+    Folding the list is exactly :func:`apply_compiled` /
+    :func:`apply_compiled_packed` — the steps are the *same closures*
+    the whole-schedule walk executes, so per-step introspection (HLO
+    attribution, profiled timing) observes the production schedule, not
+    a re-implementation of it.
+    """
+    cfg = cp.cfg if cfg is None else cfg
+    path = (cp.meta or {}).get("path", "reference")
+    st = cp.stem
+
+    def stem_fn(x):
+        if packed:
+            n, bh, bw, k = x.shape
+            if k != st.cin * st.w_in:
+                raise ValueError(
+                    f"packed input has per-channel width {k / st.cin:g}, "
+                    f"stem expects w_in={st.w_in} (cin={st.cin})")
+            if st.kind == "packed" and (
+                    executor == "gemm"
+                    or (path == "pallas"
+                        and not dispatchlib._pallas_delegates(cfg))):
+                from repro.kernels import tiling
+
+                h = tiling.packed_conv_apply(x, st.conv)
+                h = tiling.packed_asm_apply(h, st.asm)
+            else:
+                from repro.core.conv import pad_bands
+
+                coef = pad_bands(x.reshape(n, bh, bw, st.cin, st.w_in))
+                h = _apply_stem(st, coef, cp.phi, path, cfg, executor)
+        else:
+            h = _apply_stem(st, x, cp.phi, path, cfg, executor)
+        return shard(h, "batch", None, None, None)
+
+    return [("stem", stem_fn)] + _block_steps(cp, cfg, executor)
+
+
+class StepProfile:
+    """Collector for per-step device walls of a profiled compiled run.
+
+    Pass an instance as ``apply_compiled(..., profile=prof)`` (or the
+    packed twin): the schedule executes step by step — each step jitted
+    on its own, with ``jax.block_until_ready`` fencing both sides of the
+    wall — and one sample per step is appended per call.  Logits are
+    produced by the same step closures the unprofiled walk folds, so
+    the profiled output is bit-identical to the unprofiled one.
+
+    The first call through a given ``(plan, executor, packing)`` pays
+    per-step compilation inside the recorded walls; call once to warm,
+    then :meth:`reset` (keeps the jitted steps, drops the samples)
+    before the measuring calls.  :meth:`summary` reduces samples to
+    per-step medians.
+    """
+
+    def __init__(self) -> None:
+        self.order: list[str] = []
+        self.samples: dict[str, list[float]] = {}
+        self.calls = 0
+        self._fns: dict[tuple, list] = {}
+
+    def steps_for(self, cp: CompiledPlan,
+                  cfg: dispatchlib.DispatchConfig,
+                  executor: str | None, packed: bool):
+        key = (id(cp), id(cfg), executor, bool(packed))
+        fns = self._fns.get(key)
+        if fns is None:
+            fns = [(name, jax.jit(fn)) for name, fn in
+                   compiled_steps(cp, cfg, executor=executor, packed=packed)]
+            self._fns[key] = fns
+        return fns
+
+    def record(self, name: str, seconds: float) -> None:
+        if name not in self.samples:
+            self.order.append(name)
+            self.samples[name] = []
+        self.samples[name].append(seconds)
+
+    def reset(self) -> None:
+        """Drop recorded samples; keep the compiled per-step entries."""
+        self.order.clear()
+        self.samples.clear()
+        self.calls = 0
+
+    def summary(self) -> dict[str, float]:
+        """Per-step median wall (seconds), in schedule order."""
+        import statistics
+
+        return {name: statistics.median(self.samples[name])
+                for name in self.order}
+
+    def total_s(self) -> float:
+        return sum(self.summary().values())
+
+
+def _apply_profiled(cp: CompiledPlan, x: jnp.ndarray,
+                    cfg: dispatchlib.DispatchConfig,
+                    executor: str | None, profile: StepProfile,
+                    packed: bool) -> jnp.ndarray:
+    import time
+
+    h = jnp.asarray(x)
+    jax.block_until_ready(h)
+    for name, fn in profile.steps_for(cp, cfg, executor, packed):
+        t0 = time.perf_counter()
+        h = fn(h)
+        jax.block_until_ready(h)
+        profile.record(name, time.perf_counter() - t0)
+    profile.calls += 1
+    return h
 
 
 # --------------------------------------------------------------------------

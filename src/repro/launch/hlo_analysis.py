@@ -92,6 +92,12 @@ class HloCost:
     # fusion-aware `bytes accessed` by the trip-count inflation ratio.
     flops_single: float = 0.0
     bytes_single: float = 0.0
+    # named sub-computation -> HloCost, filled by analyze_hlo(...,
+    # per_computation=True).  Every charge lands in exactly one bucket
+    # (trip-multiplied: a while body's bucket carries trip× its ops;
+    # fusion interiors land in the fused computation's own bucket), so
+    # the buckets sum exactly to the whole-module totals.
+    per_computation: dict = field(default_factory=dict)
 
     @property
     def collective_bytes(self) -> float:
@@ -104,7 +110,7 @@ class HloCost:
         return out
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "flops": self.flops,
             "bytes": self.bytes,
             "flops_single": self.flops_single,
@@ -120,6 +126,11 @@ class HloCost:
                 for c in self.collectives],
             "warnings": self.warnings,
         }
+        if self.per_computation:
+            out["per_computation"] = {
+                name: c.to_json() for name, c in
+                self.per_computation.items()}
+        return out
 
 
 def _shape_bytes(type_str: str) -> float:
@@ -271,7 +282,13 @@ def _group_size(op: _Op, total_devices: int) -> int:
     return total_devices
 
 
-def analyze_hlo(hlo: str, total_devices: int = 1) -> HloCost:
+def analyze_hlo(hlo: str, total_devices: int = 1, *,
+                per_computation: bool = False) -> HloCost:
+    """Analyze optimized HLO text.  With ``per_computation=True`` the
+    result's ``per_computation`` maps every named sub-computation walked
+    (entry, while bodies, called computations, fusion interiors) to its
+    own ``HloCost`` — each charge lands in exactly one bucket, so the
+    buckets sum exactly to the module totals (tests assert this)."""
     comps = _split_computations(hlo)
     entry = None
     for line in hlo.splitlines():
@@ -286,22 +303,34 @@ def analyze_hlo(hlo: str, total_devices: int = 1) -> HloCost:
     if entry is None:
         cost.warnings.append("no computations parsed")
         return cost
-    _walk(entry, comps, 1.0, cost, total_devices, top=True, seen=set())
+    per = {} if per_computation else None
+    _walk(entry, comps, 1.0, cost, total_devices, top=True, seen=set(),
+          per_comp=per)
     single = HloCost()
     _walk(entry, comps, 1.0, single, total_devices, top=True, seen=set(),
           honor_trips=False)
     cost.flops_single = single.flops
     cost.bytes_single = single.bytes
+    if per is not None:
+        cost.per_computation = per
     return cost
 
 
 def _walk(comp_name: str, comps: dict, mult: float, cost: HloCost,
           total_devices: int, *, top: bool, seen: set,
-          honor_trips: bool = True):
+          honor_trips: bool = True, per_comp: dict | None = None):
     ops = comps.get(comp_name)
     if ops is None:
         cost.warnings.append(f"missing computation {comp_name}")
         return
+    targets = (cost,)
+    if per_comp is not None:
+        targets = (cost, per_comp.setdefault(comp_name, HloCost()))
+
+    def add(attr, v):
+        for t in targets:
+            setattr(t, attr, getattr(t, attr) + v)
+
     shapes = {op.name: op.type_str for op in ops}
     for op in ops:
         oc = op.opcode
@@ -317,13 +346,15 @@ def _walk(comp_name: str, comps: dict, mult: float, cost: HloCost,
             body = _BODY_RE.search(op.rest)
             if body:
                 _walk(body.group(1), comps, mult * trip, cost, total_devices,
-                      top=top, seen=seen, honor_trips=honor_trips)
+                      top=top, seen=seen, honor_trips=honor_trips,
+                      per_comp=per_comp)
             continue
         if oc in ("call", "async-start"):
             callee = _CALLS_RE.search(op.rest)
             if callee:
                 _walk(callee.group(1), comps, mult, cost, total_devices,
-                      top=top, seen=seen, honor_trips=honor_trips)
+                      top=top, seen=seen, honor_trips=honor_trips,
+                      per_comp=per_comp)
             continue
         if oc == "conditional":
             branches = _COND_BRANCH_RE.search(op.rest)
@@ -331,12 +362,14 @@ def _walk(comp_name: str, comps: dict, mult: float, cost: HloCost,
                 names = re.findall(r"%?([\w.\-]+)", branches.group(1))
                 for n in names[:1]:  # approximate: first branch
                     _walk(n, comps, mult, cost, total_devices, top=top,
-                          seen=seen, honor_trips=honor_trips)
+                          seen=seen, honor_trips=honor_trips,
+                          per_comp=per_comp)
             continue
         if oc == "fusion":
             callee = _CALLS_RE.search(op.rest)
             if callee:
-                _walk_fused(callee.group(1), comps, mult, cost)
+                _walk_fused(callee.group(1), comps, mult, cost,
+                            per_comp=per_comp)
             # No byte charge: CPU-backend fusions are tiny elementwise
             # islands whose boundaries would not exist under TPU fusion
             # (charging them measured 87.8% of all bytes on a 12B train
@@ -345,74 +378,86 @@ def _walk(comp_name: str, comps: dict, mult: float, cost: HloCost,
         if oc in _COLLECTIVES:
             payload = _collective_payload(op, shapes)
             gs = _group_size(op, total_devices)
-            cost.collectives.append(
-                Collective(oc, mult * payload, gs, mult))
-            cost.bytes += mult * _op_io_bytes(op, shapes)
+            for t in targets:
+                t.collectives.append(Collective(oc, mult * payload, gs, mult))
+            add("bytes", mult * _op_io_bytes(op, shapes))
             continue
         if oc in _FREE:
             # Only data-moving ops count as HBM traffic; layout ops
             # (broadcast/transpose/reshape/pad/slice) fuse away on TPU.
             if oc in ("copy", "dynamic-update-slice", "gather", "scatter",
                       "dynamic-slice", "concatenate"):
-                cost.bytes += mult * _op_io_bytes(op, shapes)
+                add("bytes", mult * _op_io_bytes(op, shapes))
             continue
         if oc == "dot":
-            cost.flops += mult * _dot_flops(op, shapes)
-            cost.bytes += mult * _op_io_bytes(op, shapes)
+            add("flops", mult * _dot_flops(op, shapes))
+            add("bytes", mult * _op_io_bytes(op, shapes))
             continue
         if oc == "convolution":
-            cost.flops += mult * _conv_flops(op, shapes)
-            cost.bytes += mult * _op_io_bytes(op, shapes)
+            add("flops", mult * _conv_flops(op, shapes))
+            add("bytes", mult * _op_io_bytes(op, shapes))
             continue
         if oc in ("reduce", "reduce-window", "sort", "reduce-precision"):
             in_elems = _op_in_elems(op, shapes)
-            cost.flops += mult * in_elems
-            cost.bytes += mult * _op_io_bytes(op, shapes)
+            add("flops", mult * in_elems)
+            add("bytes", mult * _op_io_bytes(op, shapes))
             continue
         if oc == "custom-call":
-            cost.bytes += mult * _op_io_bytes(op, shapes)
-            cost.flops += mult * _shape_elems(op.type_str)
+            add("bytes", mult * _op_io_bytes(op, shapes))
+            add("flops", mult * _shape_elems(op.type_str))
             continue
         if oc in _ELEMENTWISE or oc == "map":
             elems = _shape_elems(op.type_str)
-            cost.flops += mult * elems
+            add("flops", mult * elems)
             if oc in ("exponential", "tanh", "log", "logistic", "power",
                       "cosine", "sine", "erf", "tan"):
-                cost.transcendentals += mult * elems
+                add("transcendentals", mult * elems)
             # no bytes: elementwise fuses into producers/consumers on TPU
             continue
         # unknown op: count bytes conservatively
-        cost.bytes += mult * _op_io_bytes(op, shapes)
+        add("bytes", mult * _op_io_bytes(op, shapes))
 
 
-def _walk_fused(comp_name: str, comps: dict, mult: float, cost: HloCost):
-    """Inside a fusion: count FLOPs only (no HBM traffic)."""
+def _walk_fused(comp_name: str, comps: dict, mult: float, cost: HloCost,
+                per_comp: dict | None = None):
+    """Inside a fusion: count FLOPs only (no HBM traffic).  Charges land
+    in the fused computation's own per-computation bucket."""
     ops = comps.get(comp_name)
     if ops is None:
         return
+    targets = (cost,)
+    if per_comp is not None:
+        targets = (cost, per_comp.setdefault(comp_name, HloCost()))
+
+    def add(attr, v):
+        for t in targets:
+            setattr(t, attr, getattr(t, attr) + v)
+
     shapes = {op.name: op.type_str for op in ops}
     for op in ops:
         oc = op.opcode
         if oc == "fusion":
             callee = _CALLS_RE.search(op.rest)
             if callee:
-                _walk_fused(callee.group(1), comps, mult, cost)
+                _walk_fused(callee.group(1), comps, mult, cost,
+                            per_comp=per_comp)
         elif oc == "dot":
-            cost.flops += mult * _dot_flops(op, shapes)
+            add("flops", mult * _dot_flops(op, shapes))
         elif oc == "convolution":
-            cost.flops += mult * _conv_flops(op, shapes)
+            add("flops", mult * _conv_flops(op, shapes))
         elif oc in ("reduce", "reduce-window"):
-            cost.flops += mult * _op_in_elems(op, shapes)
+            add("flops", mult * _op_in_elems(op, shapes))
         elif oc in _ELEMENTWISE:
             elems = _shape_elems(op.type_str)
-            cost.flops += mult * elems
+            add("flops", mult * elems)
             if oc in ("exponential", "tanh", "log", "logistic", "power",
                       "cosine", "sine", "erf", "tan"):
-                cost.transcendentals += mult * elems
+                add("transcendentals", mult * elems)
         elif oc in ("call",):
             callee = _CALLS_RE.search(op.rest)
             if callee:
-                _walk_fused(callee.group(1), comps, mult, cost)
+                _walk_fused(callee.group(1), comps, mult, cost,
+                            per_comp=per_comp)
 
 
 def _op_io_bytes(op: _Op, shapes: dict[str, str]) -> float:

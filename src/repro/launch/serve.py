@@ -528,6 +528,31 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
               f"buckets {gs['buckets']} = {gs['cells']} captured cells "
               f"({gs['host_staging_bytes'] / 2**20:.1f} MiB pinned host "
               f"staging); post-warmup compiles will be reported")
+        profile_grid = None
+        if getattr(args, "profile_grid", False):
+            # pre-traffic capacity sweep: every warmed cell gets a
+            # roofline-predicted and a measured wall (captured
+            # executables only — zero post-warmup grid compiles), then
+            # per-cell predicted capacity lands on the
+            # serve_predicted_capacity gauges and device-dispatch spans
+            from repro import introspect
+
+            hw = introspect.resolve_profile(getattr(args, "hw_profile",
+                                                    None))
+            profile_grid = introspect.profile_plan_grid(
+                sched.grid_engine, hw=hw)
+            for c in profile_grid["cells"]:
+                metrics.record_predicted_capacity(
+                    c["cell"], c["predicted_req_s"])
+            sched.grid_engine.annotate_costs(
+                {c["cell"]: {"flops": c["flops"],
+                             "predicted_us": c["predicted_us"]}
+                 for c in profile_grid["cells"]})
+            print(f"[serve] grid profile ({hw.name}): "
+                  + "  ".join(
+                      f"{c['cell']}={c['predicted_req_s']:.0f}req/s"
+                      for c in profile_grid["cells"][:6])
+                  + ("  ..." if len(profile_grid["cells"]) > 6 else ""))
         t0 = time.time()
         requests = []  # (request index, ServeRequest)
         payloads = {}
@@ -606,6 +631,8 @@ def _serve_jpeg_qos(args, cfg, plan, plan_info) -> dict:
            "health": health,
            "meta": run_metadata(args, plan=plan, ladder=ladder,
                                 buckets=sched.buckets)}
+    if profile_grid is not None:
+        out["profile_grid"] = profile_grid
     if tracer is not None:
         s = tracer.summary()
         out["trace"] = {"path": trace_path, "events": s["events"],
@@ -672,9 +699,10 @@ def serve_jpeg_resnet(args) -> dict:
         # selection, deadlines, and metrics from here on
         return _serve_jpeg_qos(args, cfg, plan, plan_info)
     if getattr(args, "trace_out", None) or getattr(args, "metrics_out",
-                                                   None):
-        print("[serve] --trace-out/--metrics-out instrument the QoS "
-              "runtime; ignored without --qos")
+                                                   None) \
+            or getattr(args, "profile_grid", False):
+        print("[serve] --trace-out/--metrics-out/--profile-grid instrument "
+              "the QoS runtime; ignored without --qos")
 
     if compiled is not None:
         meta = compiled.meta or {}
@@ -915,6 +943,19 @@ def main() -> None:
                     help="how many worker dispatches raise injected "
                          "executor faults (window starts at dispatch 2; "
                          "sized to trip the chaos breaker policy)")
+    ap.add_argument("--profile-grid", action="store_true",
+                    help="after --qos warmup, sweep every captured "
+                         "(tier x bucket) grid cell: roofline-predicted "
+                         "+ measured latency per cell, predicted "
+                         "capacity (req/s) on the "
+                         "serve_predicted_capacity gauge family and in "
+                         "the report's profile_grid section; dispatch "
+                         "trace spans gain flops/predicted_us args")
+    ap.add_argument("--hw-profile", default=None,
+                    help="roofline hardware profile for --profile-grid: "
+                         "registry name (introspect.PROFILES), "
+                         "'peak_flops,hbm_bw,link_bw' triple, or unset "
+                         "for backend detection / $JPEG_HW_PROFILE")
     ap.add_argument("--compiled", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="serve the compiled fused-block schedule "

@@ -37,6 +37,7 @@ import bisect
 from typing import Any, Callable
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import plan as planlib
@@ -158,10 +159,11 @@ class GridCell:
     """
 
     __slots__ = ("name", "bucket", "item_shape", "hits", "_fn", "_pool",
-                 "_shape", "_tracer")
+                 "_shape", "_tracer", "_compiled", "_executor", "_packed")
 
     def __init__(self, name: str, bucket: int, item_shape,
-                 fn: Callable, pool: PinnedPool, tracer=None):
+                 fn: Callable, pool: PinnedPool, tracer=None, *,
+                 compiled=None, executor=None, packed=False):
         self.name = name
         self.bucket = int(bucket)
         self.item_shape = tuple(int(s) for s in item_shape)
@@ -169,6 +171,9 @@ class GridCell:
         self._fn = fn
         self._pool = pool
         self._tracer = tracer if tracer is not None else NULL_TRACER
+        self._compiled = compiled
+        self._executor = executor
+        self._packed = bool(packed)
         self.hits = 0
 
     def __call__(self, rows: np.ndarray, rids=None) -> jnp.ndarray:
@@ -198,6 +203,93 @@ class GridCell:
         host = self._pool.get(self._shape)
         host[:] = 0.0
         self._fn(jnp.array(host)).block_until_ready()
+
+    def time_wall(self, *, iters: int = 3) -> float:
+        """Median wall (seconds) of the captured executable on a zero
+        bucket batch — the staged host→device copy stays outside the
+        wall, exactly as :meth:`__call__` dispatches.  Uses only the
+        already-captured entry: zero new compiles on a warmed cell."""
+        import statistics
+        import time
+
+        host = self._pool.get(self._shape)
+        host[:] = 0.0
+        out = self._fn(jnp.array(host))  # untimed: ensures compiled
+        jax.block_until_ready(out)
+        walls = []
+        for _ in range(max(1, iters)):
+            dev = jnp.array(host)
+            t0 = time.perf_counter()
+            out = self._fn(dev)
+            jax.block_until_ready(out)
+            walls.append(time.perf_counter() - t0)
+        return statistics.median(walls)
+
+    def profile(self, rows: np.ndarray | None = None, *,
+                iters: int = 3, warmup: int = 1) -> dict:
+        """Per-block measured walls for this cell's schedule, plus the
+        whole-cell wall through its own captured (donated) executable.
+
+        Runs the cell's compiled plan in the profiling execution mode
+        (``core.plan.StepProfile`` — per-step jit with device fences;
+        logits bit-identical to the captured executable's) on ``rows``
+        staged exactly as :meth:`__call__` stages them (zero-pad to the
+        bucket; an all-zero batch when ``rows`` is None), then times the
+        unprofiled captured entry on the same staged input.  Returns
+        ``{"cell", "bucket", "steps": [{"name", "measured_us"}...],
+        "profiled_total_us", "cell_wall_us", "logits"}`` with medians
+        over ``iters`` timed calls after ``warmup`` discarded ones.
+        """
+        import statistics
+        import time
+
+        if self._compiled is None:
+            raise RuntimeError(
+                f"cell {self.name} was built without a compiled-plan "
+                "reference; profiling needs the schedule, not just the "
+                "captured entry")
+        host = self._pool.get(self._shape)
+        host[:] = 0.0
+        if rows is not None:
+            rows = np.asarray(rows, np.float32)
+            n = rows.shape[0]
+            if n > self.bucket or tuple(rows.shape[1:]) != self.item_shape:
+                raise ValueError(
+                    f"cell {self.name} serves shape {self._shape}, "
+                    f"got {tuple(rows.shape)}")
+            host[:n] = rows
+        apply_fn = (planlib.apply_compiled_packed if self._packed
+                    else planlib.apply_compiled)
+        prof = planlib.StepProfile()
+        for _ in range(max(1, warmup)):
+            apply_fn(self._compiled, jnp.array(host),
+                     executor=self._executor, profile=prof)
+        prof.reset()
+        logits = None
+        for _ in range(max(1, iters)):
+            logits = apply_fn(self._compiled, jnp.array(host),
+                              executor=self._executor, profile=prof)
+        # the captured executable donates its input: fresh device buffer
+        # per call, staged copy outside the timed wall (as __call__ does)
+        walls = []
+        out = self._fn(jnp.array(host))  # untimed: ensures it is compiled
+        jax.block_until_ready(out)
+        for _ in range(max(1, iters)):
+            dev = jnp.array(host)
+            t0 = time.perf_counter()
+            out = self._fn(dev)
+            jax.block_until_ready(out)
+            walls.append(time.perf_counter() - t0)
+        steps = prof.summary()
+        return {
+            "cell": self.name,
+            "bucket": self.bucket,
+            "steps": [{"name": k, "measured_us": v * 1e6}
+                      for k, v in steps.items()],
+            "profiled_total_us": sum(steps.values()) * 1e6,
+            "cell_wall_us": statistics.median(walls) * 1e6,
+            "logits": np.asarray(logits),
+        }
 
 
 class GridColumn:
@@ -241,7 +333,10 @@ class GridColumn:
                 on_trace=(None if on_compile is None
                           else (lambda: on_compile(name))))
             c = self.cells[key] = GridCell(name, bucket, item_shape, fn,
-                                           self.pool, tracer=self.tracer)
+                                           self.pool, tracer=self.tracer,
+                                           compiled=self.compiled,
+                                           executor=self.executor,
+                                           packed=(kind == "bytes"))
         return c
 
     def _route(self, kind: str, rows: np.ndarray,
@@ -298,6 +393,18 @@ class PlanGrid:
                     tier_name=tier.name, tracer=tracer)
             self.columns.append(by_id[key])
         self.distinct = list(by_id.values())
+        # optional per-cell cost annotations (introspect.profile_plan_grid
+        # fills these in under serve --profile-grid): cell name ->
+        # {"flops", "predicted_us", ...}; the scheduler stamps them onto
+        # its device-dispatch trace spans
+        self.cell_costs: dict[str, dict] = {}
+
+    def annotate_costs(self, costs: dict[str, dict]) -> None:
+        """Attach per-cell cost annotations (merged by cell name)."""
+        self.cell_costs.update(costs)
+
+    def cost_for(self, cell_name: str) -> dict | None:
+        return self.cell_costs.get(cell_name)
 
     def bucket_for(self, n: int) -> int:
         return bucket_for(n, self.buckets)

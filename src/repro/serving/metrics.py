@@ -199,6 +199,7 @@ class ServeMetrics:
         self._failures: dict[str, int] = {}
         self._pool_restarts = 0
         self._breaker_events: list[dict[str, Any]] = []
+        self._predicted_capacity: dict[str, float] = {}
 
     def _t_s(self) -> float:
         return round(self._clock() - self._t0, 6)
@@ -297,6 +298,14 @@ class ServeMetrics:
         with self._lock:
             self._pool_restarts += n
 
+    def record_predicted_capacity(self, cell: str, req_s: float) -> None:
+        """Roofline-predicted capacity of one grid cell, in requests per
+        second (``--profile-grid`` sweep) — exposed as the
+        ``serve_predicted_capacity`` gauge family for capacity planning
+        against the measured ``serve_images_total`` rates."""
+        with self._lock:
+            self._predicted_capacity[cell] = float(req_s)
+
     def record_breaker(self, frm: str, to: str, reason: str) -> None:
         """One circuit-breaker state transition (the state timeline)."""
         with self._lock:
@@ -373,6 +382,10 @@ class ServeMetrics:
                 "pool_restarts": self._pool_restarts,
                 "breaker_timeline": list(self._breaker_events),
             }
+            if self._predicted_capacity:
+                out["predicted_capacity_req_s"] = {
+                    c: round(v, 2)
+                    for c, v in sorted(self._predicted_capacity.items())}
             if self._compiles_post_warmup:
                 # name the offending cells so a CI zero-compile assertion
                 # failure points straight at the missing warmup shape
@@ -457,6 +470,14 @@ class ServeMetrics:
                     "Device dispatch wall.", [("", self._device_wall_s)])
             counter("serve_ingest_wall_seconds_total",
                     "Host entropy-decode wall.", [("", self._ingest_wall_s)])
+
+            if self._predicted_capacity:
+                name = "serve_predicted_capacity"
+                lines.append(f"# HELP {name} Roofline-predicted grid-cell "
+                             "capacity (requests/second).")
+                lines.append(f"# TYPE {name} gauge")
+                for cell, v in sorted(self._predicted_capacity.items()):
+                    lines.append(f'{name}{{cell="{cell}"}} {v:.6g}')
 
             def hist(name: str, labels: str, h: Log2Histogram) -> None:
                 sep = "," if labels else ""

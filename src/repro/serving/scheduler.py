@@ -801,9 +801,16 @@ class BandElasticScheduler:
             tr.span("scheduler", "batch-form", t_take, t0s,
                     args={"tier": name, "n": n, "bucket": bucket,
                           "kind": kind})
-            tr.span("device", "device-dispatch", t0s, t1s,
-                    args={"tier": name, "n": n, "bucket": bucket,
-                          "kind": kind, "rids": rids})
+            dargs = {"tier": name, "n": n, "bucket": bucket,
+                     "kind": kind, "rids": rids}
+            # --profile-grid cost annotations: the span carries the
+            # cell's static FLOPs and roofline-predicted wall, so a
+            # Perfetto query can put predicted-vs-measured on one track
+            cost = self.grid_engine.cost_for(f"{name}/{kind}/b{bucket}")
+            if cost:
+                dargs.update({k: cost[k] for k in ("flops", "predicted_us")
+                              if k in cost})
+            tr.span("device", "device-dispatch", t0s, t1s, args=dargs)
             for r in reqs:
                 # flow arrow: this request's queue row -> its batch slice
                 tr.flow(r.rid, ("request", r.rid, t_take),

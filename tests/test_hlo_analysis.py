@@ -82,6 +82,35 @@ def test_json_roundtrip():
     j = cost.to_json()
     assert j["flops"] == cost.flops
     assert "collective_bytes" in j
+    assert "per_computation" not in j  # only emitted when requested
+
+
+def test_per_computation_buckets_sum_to_totals():
+    cost = analyze_hlo(SAMPLE, 1, per_computation=True)
+    per = cost.per_computation
+    assert per  # named sub-computation -> HloCost
+    for field in ("flops", "bytes", "transcendentals"):
+        assert sum(getattr(c, field) for c in per.values()) \
+            == pytest.approx(getattr(cost, field)), field
+    # the while body's dot FLOPs land (trip-multiplied) in its own bucket
+    body = next(v for k, v in per.items() if "body" in k)
+    assert body.flops >= 5 * 2 * 4 * 4 * 4
+
+
+def test_per_computation_collectives_and_json():
+    txt = """\
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  ROOT %ar = f32[16,16]{1,0} all-reduce(%p), channel_id=2, replica_groups=[2,4]<=[8], to_apply=%add
+}
+"""
+    cost = analyze_hlo(txt, 8, per_computation=True)
+    total = sum(c.collective_bytes for c in cost.per_computation.values())
+    assert total == pytest.approx(cost.collective_bytes)
+    j = cost.to_json()
+    assert set(j["per_computation"]) == set(cost.per_computation)
+    ent = next(iter(j["per_computation"].values()))
+    assert "flops" in ent and "collective_bytes" in ent
 
 
 @pytest.mark.slow
